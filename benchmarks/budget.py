@@ -1,0 +1,54 @@
+"""Table 8: budget-aware execution at lam=16 over three budget-tightness
+mixes — the Eq. 2 admission filter converts exhaustion into served
+quality on top of the shared runtime cap (clamp + early stop)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import (N_REQ, context, csv_row, fit_router, pipeline_cell,
+                     rb_cell)
+from repro.core import PRESETS, RBConfig
+from repro.core.dispatchers import ShortestQueue
+from repro.core.routers import BestRouteRouter
+
+MIXES = (("tight", 0.75, 1.6), ("medium", 0.45, 2.2), ("loose", 0.30, 3.0))
+
+
+def _budgets(ctx, frac, scale, seed=0):
+    """Budgets sampled as scale x the CHEAPEST-tier expected cost, so the
+    tight mix forces real truncation on larger models."""
+    rng = np.random.default_rng(seed)
+    n = N_REQ
+    b = np.full(n, np.nan)
+    mask = rng.uniform(size=n) < frac
+    base = 2.0e-5
+    b[mask] = base * scale * rng.uniform(0.4, 1.2, mask.sum())
+    return b
+
+
+def main():
+    ctx = context()
+    rows = []
+    lam = 16.0
+    for name, frac, scale in MIXES:
+        budgets = _budgets(ctx, frac, scale)
+        m = rb_cell(ctx, PRESETS["uniform"], lam, budgets=budgets)
+        rows.append((f"rb_filter_{name}", m))
+        m = rb_cell(ctx, PRESETS["uniform"], lam, budgets=budgets,
+                    cfg_kw=dict(budget_filter=False))
+        rows.append((f"rb_nofilter_{name}", m))
+        br = fit_router(ctx, BestRouteRouter(threshold=1.0))
+        m = pipeline_cell(ctx, br, ShortestQueue(), lam,
+                          deployment="concurrent", budgets=budgets)
+        rows.append((f"bestroute_argmax_{name}", m))
+    print("# budget: exhaustion fraction + served-text quality")
+    for name, m in rows:
+        csv_row(f"budget/{name}", 0.0,
+                f"exh={m['exhausted_frac']:.3f};"
+                f"served_q={m['served_quality']:.3f};"
+                f"lookup_q={m['quality']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Shared benchmark context: world, dataset, tiers, trained estimator
+bundle — built once per process. Cell sizes scale with REPRO_BENCH_N
+(requests per cell; default 600 — the paper's cells use 3,534, reachable
+with REPRO_BENCH_N=3534 REPRO_BENCH_DATASET=18608)."""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (EstimatorBundle, PRESETS, PipelineConfig,        # noqa: E402
+                        PipelineScheduler, RBConfig, RouteBalance,
+                        make_requests, run_cell)
+from repro.core.dispatchers import RandomDispatch, RoundRobin, \
+    ShortestQueue                                                        # noqa: E402
+from repro.core.routers import AvengersProRouter, BestRouteRouter, \
+    PassthroughRouter                                                    # noqa: E402
+from repro.serving.tiers import paper_pool_tiers                        # noqa: E402
+from repro.serving.workload import make_arrivals                        # noqa: E402
+from repro.serving.world import build_dataset, paper_world              # noqa: E402
+
+N_REQ = int(os.environ.get("REPRO_BENCH_N", "600"))
+N_DATASET = int(os.environ.get("REPRO_BENCH_DATASET", "6000"))
+
+
+@functools.lru_cache(maxsize=1)
+def context():
+    world, names = paper_world(seed=0)
+    ds = build_dataset(world, n=N_DATASET)
+    tiers = paper_pool_tiers()
+    bundle = EstimatorBundle.train(ds, tiers, names)
+    prompts, Q, L = ds.split("train")
+    emb = _embed_all(bundle, prompts)
+    prices = np.array([_price_of(names, tiers, m) for m in names])
+    return dict(world=world, names=names, ds=ds, tiers=tiers,
+                bundle=bundle, train_emb=emb, train_Q=Q, train_L=L,
+                prices=prices)
+
+
+def _price_of(names, tiers, model):
+    for t in tiers:
+        if t.model == model:
+            return t.price_out
+    return 0.1
+
+
+def _embed_all(bundle, prompts, batch=512):
+    from repro.core.scheduler import _pad_tokens
+    toks = _pad_tokens([p.tokens for p in prompts], bundle.encoder.max_len)
+    lens = np.array([min(len(p.tokens), bundle.encoder.max_len)
+                     for p in prompts])
+    out = []
+    for i in range(0, len(prompts), batch):
+        out.append(bundle.encoder.encode(toks[i:i + batch],
+                                         lens[i:i + batch]))
+    return np.concatenate(out)
+
+
+def rb_cell(ctx, weights, lam, *, seed=0, n=None, arrival="poisson",
+            budgets=None, cfg_kw=None, fail_at=None):
+    n = n or N_REQ
+    arr = make_arrivals(arrival, lam, n, seed=seed)
+    reqs = make_requests(ctx["ds"], "test", arr, budgets=budgets)
+    cfg = RBConfig(weights=weights, **(cfg_kw or {}))
+    rb = RouteBalance(cfg, ctx["bundle"], ctx["tiers"])
+    m = run_cell(rb, ctx["tiers"], ctx["names"], reqs, seed=seed,
+                 fail_at=fail_at)
+    m["weights"] = weights
+    m["lam"] = lam
+    return m
+
+
+def fit_router(ctx, router):
+    return router.fit(ctx["train_emb"], ctx["train_Q"], ctx["train_L"],
+                      ctx["prices"])
+
+
+def pipeline_cell(ctx, router, dispatcher, lam, *, deployment="serial",
+                  seed=0, n=None, arrival="poisson", budgets=None,
+                  queue_capacity=None):
+    n = n or N_REQ
+    arr = make_arrivals(arrival, lam, n, seed=seed)
+    reqs = make_requests(ctx["ds"], "test", arr, budgets=budgets)
+    cfg = PipelineConfig(deployment=deployment,
+                         queue_capacity=queue_capacity)
+    ps = PipelineScheduler(router, dispatcher, ctx["bundle"],
+                           ctx["tiers"], cfg)
+    m = run_cell(ps, ctx["tiers"], ctx["names"], reqs, seed=seed)
+    m["lam"] = lam
+    return m
+
+
+def csv_row(name, us_per_call, derived):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,54 @@
+"""Fig 2 / Table 3 / Fig 5: the quality-latency-cost frontier — one
+RouteBalance stack sweeping the weight simplex vs decoupled baselines."""
+from __future__ import annotations
+
+from .common import (context, csv_row, fit_router, pipeline_cell, rb_cell)
+from repro.core import PRESETS
+from repro.core.dispatchers import RandomDispatch, RoundRobin, \
+    ShortestQueue
+from repro.core.routers import AvengersProRouter, BestRouteRouter, \
+    PassthroughRouter
+
+RB_SWEEP = [
+    ("rb_cost", PRESETS["cost"]),
+    ("rb_uniform", PRESETS["uniform"]),
+    ("rb_mid", (0.55, 0.25, 0.20)),
+    ("rb_quality", PRESETS["quality"]),
+    ("rb_latency", PRESETS["latency"]),
+    ("rb_q1", (1.0, 0.0, 0.0)),
+]
+
+
+def main(lam: float = 12.0):
+    ctx = context()
+    rows = []
+    for name, w in RB_SWEEP:
+        m = rb_cell(ctx, w, lam)
+        rows.append((name, m))
+    for t in (0.3, 0.5, 0.7):
+        r = fit_router(ctx, BestRouteRouter(threshold=t))
+        m = pipeline_cell(ctx, r, ShortestQueue(), lam,
+                          deployment="concurrent")
+        rows.append((f"bestroute_t{t}", m))
+    for pw in (0.5, 0.8):
+        r = fit_router(ctx, AvengersProRouter(p_w=pw))
+        m = pipeline_cell(ctx, r, ShortestQueue(), lam,
+                          deployment="concurrent")
+        rows.append((f"avengers_pw{pw}", m))
+    for dname, d in (("rr", RoundRobin()), ("sq", ShortestQueue()),
+                     ("random", RandomDispatch())):
+        m = pipeline_cell(ctx, PassthroughRouter(), d, lam,
+                          deployment="concurrent")
+        rows.append((f"passthrough_{dname}", m))
+    print("# frontier (lam=%.0f): name, quality, mean_e2e_s, cost_usd, "
+          "tput_rps, mix" % lam)
+    for name, m in rows:
+        csv_row(f"frontier/{name}",
+                m.get("measured_decide_ms_per_req", 0.0) * 1e3,
+                f"q={m['quality']:.3f};e2e={m['mean_e2e']:.2f};"
+                f"cost={m['cost_per_req']:.2e};tput={m['throughput']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

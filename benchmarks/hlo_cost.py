@@ -1,0 +1,263 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, which silently
+drops ~n_layers x of the compute for layer-scanned models (verified in
+EXPERIMENTS.md §Dry-run notes). This walker parses the optimized HLO,
+recovers loop trip counts from the canonical scan/fori condition pattern
+(a `s32[] constant(N)` feeding a compare), and accumulates per-device:
+
+  * flops            — 2*out_elems*K for every dot/convolution, x trips
+  * hbm_bytes        — post-fusion traffic model: every fusion/dot/conv/
+                       collective reads its operands and writes its result
+  * collectives      — count / payload / link-bytes per kind, x trips
+                       (ring link model: all-gather ~1x output, all-reduce
+                       ~2x, reduce-scatter / all-to-all /
+                       collective-permute ~1x)
+
+Shapes in post-SPMD HLO are per-partition, so results are per-device.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s8": 1, "u8": 1,
+                "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+                "pred": 1, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+
+_OPS = ("dot|convolution|fusion|while|call|conditional|custom-call|"
+        "all-gather-start|all-gather-done|all-gather|all-reduce-start|"
+        "all-reduce-done|all-reduce|reduce-scatter|all-to-all|"
+        "collective-permute-start|collective-permute-done|"
+        "collective-permute")
+_OP_RE = re.compile(r"\b(" + _OPS + r")\(")
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+_LINK_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_elems_bytes(tok: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(tok):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = math.prod([int(d) for d in dims.split(",") if d]) if dims else 1
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[str]] = {}
+        self.types: Dict[str, Dict[str, str]] = {}   # comp -> name -> type
+        self.entry: Optional[str] = None
+        cur = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith(("//", "#")):
+                continue
+            if cur is None:
+                if line.endswith("{") and "->" in line:
+                    h = _HDR_RE.match(line)
+                    if h:
+                        cur = h.group(2)
+                        self.computations[cur] = []
+                        self.types[cur] = {}
+                        if h.group(1):
+                            self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            self.computations[cur].append(line)
+            im = _INSTR_RE.match(line)
+            if im:
+                rest = im.group(2)
+                om = _OP_RE.search(rest)
+                if om:
+                    self.types[cur][im.group(1)] = rest[:om.start()]
+                else:
+                    # non-tracked op: type is everything up to "opname("
+                    om2 = re.search(r"\s([a-z][a-z0-9\-]*)\(", " " + rest)
+                    self.types[cur][im.group(1)] = \
+                        rest[:om2.start()] if om2 else rest
+        if self.entry is None and self.computations:
+            self.entry = list(self.computations)[-1]
+        self._memo: Dict[str, Dict[str, float]] = {}
+        self._kinds: Dict[str, Dict[str, Dict[str, float]]] = {}
+
+    # ------------------------------------------------------------------
+    _LAYOUT_ONLY = {"parameter", "convert", "copy", "bitcast", "tuple",
+                    "get-tuple-element", "constant", "reshape",
+                    "broadcast", "transpose", "iota"}
+
+    def is_layout_fusion(self, comp: str) -> bool:
+        """True if the fused computation only moves/converts data. On TPU
+        these do not exist (native bf16 dots; layout changes fuse into
+        consumers) — they are XLA:CPU artifacts (wholesale bf16->f32
+        upconversion of loop-carried KV caches was measured at 32x the
+        real traffic) and are excluded from the HBM model."""
+        for line in self.computations.get(comp, ()):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            om = re.search(r"\s([a-z][a-z0-9\-]*)\(", " " + im.group(2))
+            if om and om.group(1) not in self._LAYOUT_ONLY:
+                return False
+        return True
+
+    def trip_count(self, cond: str) -> int:
+        best = 1
+        for line in self.computations.get(cond, ()):
+            for m in re.finditer(r"[su](?:32|64)\[\]\s+constant\((\d+)\)",
+                                 line):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _operand_bytes(self, comp: str, args: str) -> int:
+        table = self.types.get(comp, {})
+        total = 0
+        for name in re.findall(r"%([\w.\-]+)", args):
+            t = table.get(name)
+            if t:
+                total += _shape_elems_bytes(t)[1]
+        return total
+
+    def _operand_shapes(self, comp: str, args: str) -> List[str]:
+        table = self.types.get(comp, {})
+        out = []
+        for name in re.findall(r"%([\w.\-]+)", args):
+            if name in table:
+                out.append(table[name])
+        return out
+
+    # ------------------------------------------------------------------
+    def cost(self, comp: Optional[str] = None) -> Dict[str, float]:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        acc = {"flops": 0.0, "hbm_bytes": 0.0, "coll_bytes": 0.0,
+               "coll_link_bytes": 0.0, "coll_count": 0.0}
+        kinds: Dict[str, Dict[str, float]] = {}
+        self._memo[comp] = acc
+        self._kinds[comp] = kinds
+
+        def add_kinds(sub: Dict, mult: float):
+            for kname, d in sub.items():
+                t = kinds.setdefault(kname, {"count": 0.0, "bytes": 0.0,
+                                             "link_bytes": 0.0})
+                for k2 in t:
+                    t[k2] += mult * d[k2]
+
+        for line in self.computations.get(comp, ()):
+            im = _INSTR_RE.match(line)
+            if not im:
+                continue
+            rest = im.group(2)
+            om = _OP_RE.search(rest)
+            if not om:
+                continue
+            op = om.group(1)
+            result_tok = rest[:om.start()]
+            args_and_attrs = rest[om.end():]
+            if op == "while":
+                body = re.search(r"body=%?([\w.\-]+)", rest)
+                cond = re.search(r"condition=%?([\w.\-]+)", rest)
+                if body:
+                    trips = self.trip_count(cond.group(1)) if cond else 1
+                    sub = self.cost(body.group(1))
+                    for k in acc:
+                        acc[k] += trips * sub[k]
+                    add_kinds(self._kinds.get(body.group(1), {}), trips)
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call"):
+                for cm in re.finditer(r"(?:calls=|to_apply=)%?([\w.\-]+)",
+                                      rest):
+                    sub = self.cost(cm.group(1))
+                    for k in acc:
+                        acc[k] += sub[k]
+                    add_kinds(self._kinds.get(cm.group(1), {}), 1.0)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", rest)
+                if bm:
+                    subs = [self.cost(n.strip().lstrip("%"))
+                            for n in bm.group(1).split(",") if n.strip()]
+                    if subs:   # worst branch
+                        worst = max(subs, key=lambda s: s["flops"])
+                        for k in acc:
+                            acc[k] += worst[k]
+                if op == "fusion":
+                    called = re.search(r"calls=%?([\w.\-]+)", rest)
+                    if called and self.is_layout_fusion(called.group(1)):
+                        continue   # CPU-only layout/convert artifact
+                    _, out_b = _shape_elems_bytes(result_tok)
+                    arg_names = args_and_attrs.split("),")[0]
+                    # per-operand cap: a fusion that only *slices* a huge
+                    # operand (dynamic-slice of a stacked cache) reads the
+                    # slice, not the operand
+                    traffic = out_b
+                    for t in self._operand_shapes(comp, arg_names):
+                        ob = _shape_elems_bytes(t)[1]
+                        traffic += min(ob, max(16 * out_b, 4096))
+                    acc["hbm_bytes"] += traffic
+                continue
+            if op in ("dot", "convolution"):
+                out_elems, out_b = _shape_elems_bytes(result_tok)
+                arg_names = args_and_attrs.split(")")[0]
+                opers = self._operand_shapes(comp, arg_names)
+                in_b = sum(_shape_elems_bytes(t)[1] for t in opers)
+                k = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+                if cm and opers:
+                    dims_m = _SHAPE_RE.search(opers[0])
+                    if dims_m:
+                        dims = [int(d) for d in dims_m.group(2).split(",")
+                                if d]
+                        for i in cm.group(1).split(","):
+                            if i and int(i) < len(dims):
+                                k *= dims[int(i)]
+                if op == "convolution":
+                    # window size from kernel operand
+                    if len(opers) > 1:
+                        km = _SHAPE_RE.search(opers[1])
+                        if km:
+                            kd = [int(d) for d in km.group(2).split(",")
+                                  if d]
+                            k = max(1, math.prod(kd) // max(kd[-1], 1))
+                acc["flops"] += 2.0 * out_elems * max(k, 1)
+                acc["hbm_bytes"] += out_b + in_b
+                continue
+            kind = op.replace("-start", "").replace("-done", "")
+            if kind in _LINK_FACTOR and not op.endswith("-done"):
+                _, out_b = _shape_elems_bytes(result_tok)
+                f = _LINK_FACTOR[kind]
+                acc["coll_bytes"] += out_b
+                acc["coll_link_bytes"] += out_b * f
+                acc["coll_count"] += 1
+                acc["hbm_bytes"] += out_b
+                t = kinds.setdefault(kind, {"count": 0.0, "bytes": 0.0,
+                                            "link_bytes": 0.0})
+                t["count"] += 1
+                t["bytes"] += out_b
+                t["link_bytes"] += out_b * f
+        return acc
+
+    def kinds(self) -> Dict[str, Dict[str, float]]:
+        self.cost()
+        return self._kinds.get(self.entry, {})
+
+
+def analyze(hlo_text: str) -> Dict:
+    mod = HloModule(hlo_text)
+    c = mod.cost()
+    return {"flops": c["flops"], "hbm_bytes": c["hbm_bytes"],
+            "coll_bytes": c["coll_bytes"],
+            "coll_link_bytes": c["coll_link_bytes"],
+            "coll_count": c["coll_count"], "by_kind": mod.kinds()}

@@ -1,0 +1,36 @@
+"""Table 7: the four-arm isolation — where does the benefit come from?
+
+arm1 full objective; arm2 w_lat=0 + reactive shortest-queue tiebreak;
+arm3 w_lat=0 + predictive T̂ tiebreak; arm4 full objective with a static
+per-tier prior (nominal TPOT x L̂, zero telemetry). The paper's finding:
+arm2 ~ arm3 (within-tier prediction adds nothing over reactive), arm1
+beats both via the cross-tier mix shift (72B share 14% -> 1%), and arm4
+~ arm1 (the learned predictor is not load-bearing)."""
+from __future__ import annotations
+
+from .common import context, csv_row, rb_cell
+from repro.core import PRESETS
+
+ARMS = (("arm1_full", dict(latency_mode="full")),
+        ("arm2_reactive", dict(latency_mode="off_reactive")),
+        ("arm3_predictive", dict(latency_mode="off_predictive")),
+        ("arm4_static_prior", dict(latency_mode="static_prior")))
+
+
+def main():
+    ctx = context()
+    rows = []
+    for lam in (12.0, 24.0, 30.0):
+        for name, kw in ARMS:
+            m = rb_cell(ctx, PRESETS["uniform"], lam, cfg_kw=kw)
+            share72 = sum(v for k, v in m["mix"].items() if "72b" in k)
+            rows.append((name, lam, m))
+            csv_row(f"isolation/{name}@{lam:.0f}",
+                    m.get("measured_decide_ms_per_req", 0.0) * 1e3,
+                    f"e2e={m['mean_e2e']:.2f};q={m['quality']:.3f};"
+                    f"share72={share72:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

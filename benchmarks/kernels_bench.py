@@ -1,0 +1,80 @@
+"""Hot-path microbenchmarks: the batched KNN lookup (the paper's ~27 ms
+term), the greedy scoring loop scaling (|I| = 13/100/500; paper:
+12.8/14.3/22.5 us), and kernel-vs-oracle parity timings.
+
+Pallas kernels run interpret=True here (CPU container) — their timing is
+NOT the TPU number; the jitted jnp backend is the measured hot path, and
+the kernels are validated for correctness + lowered-structure only."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import context, csv_row
+from repro.core import PRESETS
+from repro.core.assignment import greedy_assign, lpt_order
+
+
+def _time(fn, n=20, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def main():
+    ctx = context()
+    bundle = ctx["bundle"]
+    rng = np.random.default_rng(0)
+    # batched embed+KNN (the per-batch amortized decision compute)
+    prompts, Q, L = ctx["ds"].split("test")
+    for B in (1, 16, 64):
+        reqs = [prompts[i] for i in range(B)]
+        from repro.core.scheduler import _pad_tokens
+        toks = _pad_tokens([p.tokens for p in reqs], bundle.encoder.max_len)
+        lens = np.array([min(len(p.tokens), 128) for p in reqs])
+        dt_e = _time(lambda: bundle.encoder.encode(toks, lens))
+        emb = bundle.encoder.encode(toks, lens)
+        dt_k = _time(lambda: bundle.knn.query(emb))
+        csv_row(f"kernels/embed_knn_B{B}", (dt_e + dt_k) * 1e6,
+                f"embed_us={dt_e*1e6:.0f};knn_us={dt_k*1e6:.0f};"
+                f"per_req_us={(dt_e+dt_k)/B*1e6:.0f}")
+    # scoring-loop scaling with instance count (paper §4.2)
+    for I in (13, 100, 500):
+        R = 16
+        q_inst = rng.uniform(0, 1, (R, I))
+        c_hat = rng.uniform(1e-6, 1e-4, (R, I))
+        l_inst = rng.uniform(50, 500, (R, I))
+        tpot = rng.uniform(0.01, 0.05, I)
+        d = rng.uniform(0, 2000, I)
+        b = rng.integers(1, 16, I).astype(float)
+        free = rng.integers(0, 8, I).astype(float)
+        maxb = np.full(I, 48.0)
+        order = lpt_order(l_inst.max(1))
+        dt = _time(lambda: greedy_assign(
+            order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
+            PRESETS["uniform"]), n=10)
+        csv_row(f"kernels/scoring_loop_I{I}", dt / R * 1e6,
+                f"per_req_us={dt/R*1e6:.1f}")
+    # pallas kernels vs oracles (correctness timing, interpret mode)
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+    q = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4096, 128)), jnp.float32)
+    dv, di = ops.knn_topk(q, x, k=10)
+    rv, ri = kref.knn_topk_ref(q, x, k=10)
+    err = float(jnp.abs(dv - rv).max())
+    dt_ref = _time(lambda: jax.block_until_ready(
+        kref.knn_topk_ref(q, x, k=10)), n=10)
+    csv_row("kernels/knn_topk_pallas", dt_ref * 1e6,
+            f"allclose_err={err:.1e};jnp_oracle_us={dt_ref*1e6:.0f}")
+    return None
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Table 12 + §6.8: deployed predictor accuracy and headroom.
+
+TPOT-head MAE per tier on held-out sweeps; KNN best-model accuracy and
+its insensitivity to k; oracle vs prompt-blind-mix headroom."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import _embed_all, context, csv_row
+from repro.core.scheduler import _tier_sweep
+from repro.estimators.knn import KNNEstimator
+from repro.estimators.latency import LatencyHead, mae, mape
+
+
+def main():
+    ctx = context()
+    rows = []
+    rng = np.random.default_rng(99)
+    # --- latency heads (held-out tier sweeps)
+    for t in ctx["tiers"]:
+        X, y = _tier_sweep(t, rng)
+        head = ctx["bundle"].heads[t.name]
+        pred = head.model.predict(X)
+        m_ae = mae(pred, y) * 1e3
+        # end-to-end MAPE: T = tpot * (d/b + L)
+        Lh = rng.uniform(50, 600, len(y))
+        e2e_p = pred * (X[:, 1] / np.maximum(X[:, 0], 1) + Lh)
+        e2e_t = y * (X[:, 1] / np.maximum(X[:, 0], 1) + Lh)
+        m_ape = mape(e2e_p, e2e_t)
+        rows.append((t.name, m_ae, m_ape))
+        csv_row(f"predictors/tpot_{t.name.split('/')[0]}", 0.0,
+                f"tpot_mae_ms={m_ae:.3f};e2e_mape={m_ape*100:.1f}%")
+    # --- KNN accuracy + k sweep
+    prompts, Q, L = ctx["ds"].split("test")
+    emb = _embed_all(ctx["bundle"], prompts)
+    for k in (5, 10, 20, 50):
+        knn = KNNEstimator(k=k, backend="jax").fit(
+            ctx["train_emb"], ctx["train_Q"], ctx["train_L"])
+        acc = knn.best_model_accuracy(emb, Q)
+        qh, lh = knn.query(emb)
+        routed_q = float(np.take_along_axis(
+            Q, qh.argmax(1)[:, None], 1).mean())
+        csv_row(f"predictors/knn_k{k}", 0.0,
+                f"best_model_acc={acc:.3f};routed_q={routed_q:.3f}")
+    # --- headroom: oracle vs prompt-blind mix
+    oracle = float(Q.max(1).mean())
+    knn = ctx["bundle"].knn
+    qh, _ = knn.query(emb)
+    choice = qh.argmax(1)
+    shares = np.bincount(choice, minlength=Q.shape[1]) / len(choice)
+    rng2 = np.random.default_rng(3)
+    blind = rng2.choice(Q.shape[1], len(choice), p=shares)
+    blind_q = float(np.take_along_axis(Q, blind[:, None], 1).mean())
+    routed_q = float(np.take_along_axis(Q, choice[:, None], 1).mean())
+    csv_row("predictors/headroom", 0.0,
+            f"oracle={oracle:.3f};routed={routed_q:.3f};"
+            f"prompt_blind={blind_q:.3f}")
+    # --- length prediction
+    _, lh = knn.query(emb)
+    csv_row("predictors/length", 0.0,
+            f"len_mape={np.mean(np.abs(lh-L)/np.maximum(L,1)):.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Table 4: RouteBalance off-instance-residual decomposition vs load
+(compute / batch wait / stats fetch; sub-linear growth, amortizing
+decision compute)."""
+from __future__ import annotations
+
+from .common import context, csv_row, rb_cell
+from repro.core import PRESETS
+
+
+def main():
+    ctx = context()
+    rows = []
+    for lam in (6.0, 12.0, 18.0, 24.0, 30.0):
+        m = rb_cell(ctx, PRESETS["uniform"], lam)
+        rows.append((lam, m))
+        csv_row(f"residual/lam{lam:.0f}",
+                m["measured_decide_ms_mean"] * 1e3,
+                f"compute={m['residual_compute']*1e3:.1f}ms;"
+                f"wait={m['residual_batch_wait']*1e3:.1f}ms;"
+                f"stats={m['residual_stats_fetch']*1e3:.2f}ms;"
+                f"total={m['mean_residual']*1e3:.1f}ms;"
+                f"e2e={m['mean_e2e']:.2f}s;"
+                f"batch={m.get('mean_batch_size', 0):.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

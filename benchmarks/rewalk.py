@@ -1,0 +1,39 @@
+"""Re-run the HLO cost walker over saved dry-run artifacts (no
+recompilation) and update the cell JSONs in place — used after walker
+refinements and by the §Perf loop."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.hlo_cost import analyze
+
+RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+
+def main(pattern: str = "*.json"):
+    for jf in sorted(glob.glob(str(RUNS / pattern))):
+        p = pathlib.Path(jf)
+        hlo = p.with_suffix("").with_suffix(".hlo.gz") \
+            if p.name.endswith(".json") else None
+        hlo = pathlib.Path(str(p)[:-5] + ".hlo.gz")
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok" or not hlo.exists():
+            continue
+        walk = analyze(gzip.open(hlo, "rt").read())
+        d["walk"] = walk
+        d["flops_per_device"] = walk["flops"]
+        d["hbm_bytes_per_device"] = walk["hbm_bytes"]
+        d["collectives"] = walk["by_kind"]
+        d["collective_link_bytes_per_device"] = walk["coll_link_bytes"]
+        p.write_text(json.dumps(d, indent=1))
+        print("rewalked", p.name)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "*.json")

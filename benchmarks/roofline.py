@@ -1,0 +1,124 @@
+"""§Roofline: the three-term analysis per (arch x shape) from the
+compiled dry-run artifacts (runs/dryrun/*.json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_link_bytes_per_device / link_bw
+
+HLO terms come from the trip-count-aware walker (benchmarks/hlo_cost.py);
+xla's own cost_analysis undercounts scan bodies (see EXPERIMENTS.md).
+MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode), with N =
+active params. The roofline fraction = ideal time (max of useful-compute
+and irreducible-bytes terms) / bounded time (max of the three terms).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import pathlib
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config                        # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.models.config import SHAPES                      # noqa: E402
+
+RUNS = pathlib.Path(__file__).resolve().parents[1] / "runs" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def ideal_bytes(cfg, shape, n_chips) -> float:
+    """Irreducible per-device HBM traffic per step."""
+    n_total = cfg.param_counts()["total"]
+    pbytes = 2.0 * n_total
+    if shape.kind == "train":
+        # read params (fwd+bwd ~2x), write grads, touch opt moments (f32)
+        return (3 * pbytes + 8.0 * n_total) / n_chips
+    if shape.kind == "prefill":
+        return pbytes / n_chips
+    kv = 0.0
+    for blk in cfg.layer_types:
+        kv += blk.cache_len(shape.seq_len) * cfg.n_kv_heads * cfg.hd * 2 * 2
+    kv *= shape.global_batch
+    if cfg.ssm_state:
+        kv += (cfg.n_layers * shape.global_batch * cfg.ssm_heads
+               * cfg.ssm_head_dim * cfg.ssm_state * 4)
+    return (pbytes + kv) / n_chips
+
+
+def analyze_cell(path: str):
+    d = json.load(open(path))
+    if d["status"] != "ok":
+        return dict(arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                    status=d["status"], reason=d.get("reason", ""))
+    cfg = get_config(d["arch"])
+    shape = SHAPES[d["shape"]]
+    chips = d["n_chips"]
+    t_comp = d["flops_per_device"] / PEAK_FLOPS_BF16
+    t_mem = d["hbm_bytes_per_device"] / HBM_BW
+    t_coll = d["collective_link_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape) / chips
+    t_ideal = max(mf / PEAK_FLOPS_BF16,
+                  ideal_bytes(cfg, shape, chips) / HBM_BW)
+    bound = max(terms.values())
+    return dict(
+        arch=d["arch"], shape=d["shape"], mesh=d["mesh"], status="ok",
+        t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+        dominant=dom, model_flops_per_dev=mf,
+        flops_ratio=mf / max(d["flops_per_device"], 1.0),
+        t_ideal=t_ideal, roofline_fraction=t_ideal / max(bound, 1e-12),
+        peak_gb=d["peak_bytes_per_device"] / 1e9,
+        microbatches=d.get("meta", {}).get("microbatches"),
+    )
+
+
+def main(mesh: str = "16x16", tag: str = ""):
+    rows = []
+    pat = f"*__{mesh}{('__' + tag) if tag else ''}.json"
+    for f in sorted(glob.glob(str(RUNS / pat))):
+        if tag == "" and "__ovr" in f:
+            continue
+        rows.append(analyze_cell(f))
+    print("# roofline (%s): arch,shape,t_comp_s,t_mem_s,t_coll_s,"
+          "dominant,MODEL/HLO_flops,roofline_frac" % mesh)
+    out_csv = RUNS.parent / f"roofline_{mesh}.csv"
+    with open(out_csv, "w") as fh:
+        fh.write("arch,shape,status,t_compute,t_memory,t_collective,"
+                 "dominant,flops_ratio,roofline_fraction,peak_gb\n")
+        for r in rows:
+            if r["status"] != "ok":
+                fh.write(f"{r['arch']},{r['shape']},{r['status']},,,,,,,\n")
+                print(f"roofline/{r['arch']}__{r['shape']},0.0,"
+                      f"status={r['status']}")
+                continue
+            fh.write(f"{r['arch']},{r['shape']},ok,{r['t_compute']:.4f},"
+                     f"{r['t_memory']:.4f},{r['t_collective']:.4f},"
+                     f"{r['dominant']},{r['flops_ratio']:.3f},"
+                     f"{r['roofline_fraction']:.3f},{r['peak_gb']:.2f}\n")
+            print(f"roofline/{r['arch']}__{r['shape']},0.0,"
+                  f"comp={r['t_compute']:.3f};mem={r['t_memory']:.3f};"
+                  f"coll={r['t_collective']:.3f};dom={r['dominant']};"
+                  f"ratio={r['flops_ratio']:.2f};"
+                  f"frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--tag", default="")
+    a = ap.parse_args()
+    main(a.mesh, a.tag)

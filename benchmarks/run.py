@@ -1,0 +1,41 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  python -m benchmarks.run            # full suite
+  python -m benchmarks.run frontier   # one module
+Sizes scale with REPRO_BENCH_N (default 600 requests/cell; the paper's
+cells are 3,534)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+MODULES = ("predictors", "kernels_bench", "replay", "frontier",
+           "residual", "isolation", "batching", "budget", "tier_loss",
+           "ladder", "tails", "roofline")
+
+
+def main() -> None:
+    only = sys.argv[1:] if len(sys.argv) > 1 else None
+    failures = []
+    for name in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"\n### {name}")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"### {name} done in {time.time()-t0:.0f}s")
+        except Exception:
+            failures.append(name)
+            print(f"### {name} FAILED:\n{traceback.format_exc()[-2000:]}")
+    if failures:
+        print("\nFAILED MODULES:", failures)
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

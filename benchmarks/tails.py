@@ -1,0 +1,45 @@
+"""Table 13 + §6.9: tail latency at headline operating points and
+robustness under non-stationary (gamma-bursty / square-wave) arrivals."""
+from __future__ import annotations
+
+from .common import context, csv_row, fit_router, pipeline_cell, rb_cell
+from repro.core import PRESETS
+from repro.core.dispatchers import ShortestQueue
+from repro.core.routers import AvengersProRouter, BestRouteRouter
+
+
+def main():
+    ctx = context()
+    rows = []
+    for lam in (12.0, 30.0):
+        for name, w in (("uniform", PRESETS["uniform"]),
+                        ("quality", PRESETS["quality"]),
+                        ("cost", PRESETS["cost"])):
+            m = rb_cell(ctx, w, lam)
+            rows.append((f"rb_{name}@{lam:.0f}", m))
+        br = fit_router(ctx, BestRouteRouter(threshold=0.5))
+        m = pipeline_cell(ctx, br, ShortestQueue(), lam,
+                          deployment="serial")
+        rows.append((f"bestroute_serial@{lam:.0f}", m))
+        ap = fit_router(ctx, AvengersProRouter(p_w=0.8))
+        m = pipeline_cell(ctx, ap, ShortestQueue(), lam,
+                          deployment="serial")
+        rows.append((f"avengers_serial@{lam:.0f}", m))
+    # non-stationary arrivals at matched mean lam=18
+    for kind in ("poisson", "gamma", "square"):
+        m = rb_cell(ctx, PRESETS["uniform"], 18.0, arrival=kind)
+        rows.append((f"rb_uniform_{kind}@18", m))
+        br = fit_router(ctx, BestRouteRouter(threshold=0.5))
+        m = pipeline_cell(ctx, br, ShortestQueue(), 18.0,
+                          deployment="serial", arrival=kind)
+        rows.append((f"bestroute_serial_{kind}@18", m))
+    print("# tails: p95/p99 e2e, p99 ttft")
+    for name, m in rows:
+        csv_row(f"tails/{name}", 0.0,
+                f"p95={m['p95_e2e']:.1f};p99={m['p99_e2e']:.1f};"
+                f"p99ttft={m['p99_ttft']:.2f};e2e={m['mean_e2e']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

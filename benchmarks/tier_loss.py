@@ -1,0 +1,37 @@
+"""§6.8 graceful tier loss: remove the entire 72B tier mid-run; losing a
+tier must be a capacity/quality-ceiling event, not an availability event
+(zero failed requests, load redistributes, quality falls to the
+best-remaining ceiling)."""
+from __future__ import annotations
+
+from .common import N_REQ, context, csv_row, rb_cell
+from repro.core import PRESETS
+
+
+def main():
+    ctx = context()
+    rows = []
+    iids = [f"{t.name}#{j}" for t in ctx["tiers"] if "72b" in t.name
+            for j in range(t.n_instances)]
+    for name, w in (("quality", PRESETS["quality"]),
+                    ("uniform", PRESETS["uniform"])):
+        base = rb_cell(ctx, w, 12.0)
+        lost = rb_cell(ctx, w, 12.0,
+                       fail_at={"time": 0.0, "instances": iids})
+        rows.append((name, base, lost))
+        csv_row(f"tier_loss/{name}", 0.0,
+                f"q_base={base['quality']:.3f};q_lost={lost['quality']:.3f};"
+                f"failed={lost['failed']};e2e={lost['mean_e2e']:.2f};"
+                f"mix={'|'.join(f'{k.split(chr(47))[0].split(chr(46))[-1]}'
+                                f':{v:.2f}' for k, v in lost['mix'].items())}")
+    # mid-run failure (availability event handling): kill after 20 s
+    lost_mid = rb_cell(ctx, PRESETS["uniform"], 12.0,
+                       fail_at={"time": 20.0, "instances": iids})
+    csv_row("tier_loss/uniform_midrun", 0.0,
+            f"failed={lost_mid['failed']};q={lost_mid['quality']:.3f};"
+            f"e2e={lost_mid['mean_e2e']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""End-to-end serving driver: one deployed RouteBalance stack sweeping
+its weight vector across the frontier, vs an engineering-equalized
+BEST-Route baseline — the paper's headline experiment in miniature.
+
+    PYTHONPATH=src python examples/serve_cluster.py [--lam 12] [--n 600]
+"""
+import argparse
+
+from repro.core import (EstimatorBundle, PRESETS, PipelineConfig,
+                        PipelineScheduler, RBConfig, RouteBalance,
+                        make_requests, run_cell)
+from repro.core.dispatchers import ShortestQueue
+from repro.core.routers import BestRouteRouter
+from repro.serving.tiers import paper_pool_tiers
+from repro.serving.workload import poisson_arrivals
+from repro.serving.world import build_dataset, paper_world
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lam", type=float, default=12.0)
+    ap.add_argument("--n", type=int, default=600)
+    args = ap.parse_args()
+
+    world, names = paper_world(seed=0)
+    ds = build_dataset(world, n=6000)
+    tiers = paper_pool_tiers()
+    bundle = EstimatorBundle.train(ds, tiers, names)
+
+    def cell(sched):
+        reqs = make_requests(ds, "test",
+                             poisson_arrivals(args.lam, args.n, seed=1))
+        return run_cell(sched, tiers, names, reqs)
+
+    print(f"{'cell':26s} {'quality':>8s} {'E2E s':>7s} {'p99 s':>7s} "
+          f"{'cost $':>9s} {'tput':>6s}")
+    for name, w in (("rb/cost", PRESETS["cost"]),
+                    ("rb/uniform", PRESETS["uniform"]),
+                    ("rb/quality", PRESETS["quality"])):
+        m = cell(RouteBalance(RBConfig(weights=w), bundle, tiers))
+        print(f"{name:26s} {m['quality']:8.3f} {m['mean_e2e']:7.2f} "
+              f"{m['p99_e2e']:7.1f} {m['cost_per_req']:9.2e} "
+              f"{m['throughput']:6.1f}")
+    for t in (0.5, 0.7):
+        r = BestRouteRouter(threshold=t)
+        r.fit_from = None
+        prompts, Q, L = ds.split("train")
+        import numpy as np
+        from benchmarks.common import _embed_all
+        emb = _embed_all(bundle, prompts)
+        prices = np.array([tt.price_out for m_ in names
+                           for tt in tiers if tt.model == m_])
+        r.fit(emb, Q, L, prices)
+        m = cell(PipelineScheduler(r, ShortestQueue(), bundle, tiers,
+                                   PipelineConfig(deployment="concurrent")))
+        print(f"{'bestroute/t%.1f' % t:26s} {m['quality']:8.3f} "
+              f"{m['mean_e2e']:7.2f} {m['p99_e2e']:7.1f} "
+              f"{m['cost_per_req']:9.2e} {m['throughput']:6.1f}")
+
+
+if __name__ == "__main__":
+    main()

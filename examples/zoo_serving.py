@@ -1,0 +1,39 @@
+"""RouteBalance over the ASSIGNED architecture zoo: a heterogeneous pool
+of gemma3-27b / mixtral-8x7b / phi3-mini / granite-3-2b / mamba2-1.3b /
+qwen3-0.6b tiers — the paper's technique is model-agnostic, so the whole
+model zoo becomes one routed cluster (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/zoo_serving.py
+"""
+from repro.core import EstimatorBundle, PRESETS, RBConfig, RouteBalance, \
+    make_requests, run_cell
+from repro.serving.tiers import assigned_pool_tiers, tpot_table
+from repro.serving.workload import poisson_arrivals
+from repro.serving.world import World, build_dataset
+
+# capacities/verbosities for the zoo pool (capability-ordered)
+CAPS = {"gemma3-27b": 0.68, "mixtral-8x7b": 0.62, "phi3-mini-3.8b": 0.50,
+        "granite-3-2b": 0.42, "mamba2-1.3b": 0.34, "qwen3-0.6b": 0.28}
+VERB = {"gemma3-27b": 0.85, "mixtral-8x7b": 0.9, "phi3-mini-3.8b": 1.0,
+        "granite-3-2b": 1.05, "mamba2-1.3b": 1.1, "qwen3-0.6b": 1.2}
+
+
+def main():
+    tiers = assigned_pool_tiers()
+    names = [t.model for t in tiers]
+    world = World([CAPS[m] for m in names], [VERB[m] for m in names],
+                  seed=3)
+    ds = build_dataset(world, n=4000)
+    bundle = EstimatorBundle.train(ds, tiers, names)
+    print("zoo pool TPOT ms (b=8, ctx=500):", tpot_table(tiers))
+    for pname in ("cost", "uniform", "quality"):
+        reqs = make_requests(ds, "test", poisson_arrivals(10.0, 400, seed=1))
+        rb = RouteBalance(RBConfig(weights=PRESETS[pname]), bundle, tiers)
+        m = run_cell(rb, tiers, names, reqs)
+        mix = {k.split("/")[0]: round(v, 2) for k, v in m["mix"].items()}
+        print(f"{pname:8s} q={m['quality']:.3f} e2e={m['mean_e2e']:.2f}s "
+              f"cost=${m['cost_per_req']:.2e} mix={mix}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+from .registry import ARCHS, LONG_CONTEXT_OK, QWEN25_POOL, get_config, \
+    input_specs, list_archs, shape_applicable, skip_reason, smoke_variant
+from repro.models.config import SHAPES, ShapeSpec
+
+__all__ = ["ARCHS", "LONG_CONTEXT_OK", "QWEN25_POOL", "get_config",
+           "input_specs", "list_archs", "shape_applicable", "skip_reason",
+           "smoke_variant", "SHAPES", "ShapeSpec"]

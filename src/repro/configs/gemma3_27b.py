@@ -1,0 +1,5 @@
+"""Config module for --arch gemma3-27b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["gemma3-27b"]
+SMOKE = smoke_variant(CONFIG)

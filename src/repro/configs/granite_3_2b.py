@@ -1,0 +1,5 @@
+"""Config module for --arch granite-3-2b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["granite-3-2b"]
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config module for --arch granite-moe-3b-a800m. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["granite-moe-3b-a800m"]
+SMOKE = smoke_variant(CONFIG)

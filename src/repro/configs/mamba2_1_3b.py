@@ -1,0 +1,5 @@
+"""Config module for --arch mamba2-1.3b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["mamba2-1.3b"]
+SMOKE = smoke_variant(CONFIG)

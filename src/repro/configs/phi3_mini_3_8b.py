@@ -1,0 +1,5 @@
+"""Config module for --arch phi3-mini-3.8b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["phi3-mini-3.8b"]
+SMOKE = smoke_variant(CONFIG)

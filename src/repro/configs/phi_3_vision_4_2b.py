@@ -1,0 +1,5 @@
+"""Config module for --arch phi-3-vision-4.2b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["phi-3-vision-4.2b"]
+SMOKE = smoke_variant(CONFIG)

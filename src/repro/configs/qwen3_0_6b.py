@@ -1,0 +1,5 @@
+"""Config module for --arch qwen3-0.6b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["qwen3-0.6b"]
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config module for --arch recurrentgemma-2b. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["recurrentgemma-2b"]
+SMOKE = smoke_variant(CONFIG)

@@ -1,0 +1,5 @@
+"""Config module for --arch whisper-tiny. Binding definition in registry.py."""
+from .registry import ARCHS, smoke_variant
+
+CONFIG = ARCHS["whisper-tiny"]
+SMOKE = smoke_variant(CONFIG)

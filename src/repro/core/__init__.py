@@ -1,0 +1,11 @@
+from .assignment import greedy_assign, greedy_assign_jax, hungarian, \
+    lpt_order
+from .budget import admission_mask, max_tokens_clamp
+from .dispatchers import DISPATCHERS, RandomDispatch, RoundRobin, \
+    ShortestQueue
+from .driver import make_requests, run_cell
+from .pipeline import PipelineConfig, PipelineScheduler
+from .routers import AvengersProRouter, BestRouteRouter, PassthroughRouter
+from .scheduler import EstimatorBundle, RBConfig, RouteBalance
+from .scoring import score_matrix, score_row
+from .weights import PRESETS, sweep, validate

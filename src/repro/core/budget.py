@@ -1,0 +1,41 @@
+"""Equation 2 budget control: average-case admission filter at scoring
+time, worst-case enforcement at dispatch (max_tokens clamp) plus the
+engine's streaming early-stop (§4.1, §6.4)."""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+
+def admission_mask(budgets: np.ndarray, len_in: np.ndarray,
+                   pred_len: np.ndarray, price_in: np.ndarray,
+                   price_out: np.ndarray) -> np.ndarray:
+    """(R,) budgets (nan = none), (R,) len_in, (R, I) pred_len per
+    instance's model, (I,) prices -> (R, I) allowed mask.
+
+    Ĉ(r,i) = ℓ_in c_in + L̂ c_out <= b_r. Requests whose budget excludes
+    every candidate keep their single cheapest candidate (the system still
+    serves every request; §6.2)."""
+    R, I = pred_len.shape
+    c_hat = (len_in[:, None] * price_in[None, :]
+             + pred_len * price_out[None, :]) / 1e6
+    has_budget = ~np.isnan(budgets)
+    allowed = np.ones((R, I), bool)
+    constrained = np.where(has_budget[:, None],
+                           c_hat <= budgets[:, None], True)
+    none_fit = ~constrained.any(axis=1)
+    cheapest = c_hat.argmin(axis=1)
+    constrained[none_fit, :] = False
+    constrained[none_fit, cheapest[none_fit]] = True
+    return allowed & constrained, c_hat
+
+
+def max_tokens_clamp(budget: Optional[float], len_in: int,
+                     price_in: float, price_out: float) -> Optional[int]:
+    """Worst-case enforcement at dispatch: the response may not exceed the
+    remaining budget at the chosen model's output price."""
+    if budget is None or np.isnan(budget):
+        return None
+    rem = budget - len_in * price_in / 1e6
+    return max(int(rem / (price_out / 1e6 + 1e-30)), 1)

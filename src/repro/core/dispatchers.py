@@ -1,0 +1,51 @@
+"""Replica dispatchers for pipeline mode: round-robin, shortest-queue,
+random (§5)."""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+class Dispatcher:
+    name = "dispatcher"
+
+    def pick(self, candidates: Sequence, telemetry: Dict[str, Dict]) -> int:
+        raise NotImplementedError
+
+
+class RoundRobin(Dispatcher):
+    name = "rr"
+
+    def __init__(self):
+        self._n = 0
+
+    def pick(self, candidates, telemetry):
+        i = self._n % len(candidates)
+        self._n += 1
+        return i
+
+
+class ShortestQueue(Dispatcher):
+    name = "sq"
+
+    def pick(self, candidates, telemetry):
+        loads = []
+        for inst in candidates:
+            s = telemetry.get(inst.iid, inst.telemetry())
+            loads.append(s["queue_depth"] * 1000 + s["pending_decode"])
+        return int(np.argmin(loads))
+
+
+class RandomDispatch(Dispatcher):
+    name = "random"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def pick(self, candidates, telemetry):
+        return int(self.rng.integers(0, len(candidates)))
+
+
+DISPATCHERS = {"rr": RoundRobin, "sq": ShortestQueue,
+               "random": RandomDispatch}

@@ -1,0 +1,122 @@
+"""Pipeline mode: decoupled router -> dispatcher baselines inside the
+SAME batching/telemetry/dispatch path as RouteBalance (§5), plus the
+deployment-model ladder of §6.3:
+
+  serial      — one scoring call per request, one server (as published)
+  microbatch  — co-located batch collector, pads to the longest sequence
+                (1.72 s per batch of 64), batches cannot overlap
+  concurrent  — our enhancement: scoring micro-batched off the scheduling
+                loop on a thread-pool (32 workers), routing byte-identical
+
+vLLM-SR runs as a separate-process classifier service with a BOUNDED
+queue — overflow = failed requests (Table 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.cluster import ClusterSim
+from repro.serving.request import Request
+from repro.serving.tiers import Tier
+
+from .budget import max_tokens_clamp
+from .dispatchers import Dispatcher
+from .routers import Router
+from .scheduler import EstimatorBundle, _pad_tokens
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    deployment: str = "serial"     # serial | microbatch | concurrent
+    n_workers: int = 32            # concurrent scoring workers
+    microbatch_size: int = 64
+    microbatch_time: float = 1.72  # padded batch service time (§6.3)
+    queue_capacity: Optional[int] = None   # bounded => drops (vLLM-SR)
+    budget_clamp: bool = True
+
+
+class PipelineScheduler:
+    """Router station -> dispatcher -> instance, event-driven."""
+
+    def __init__(self, router: Router, dispatcher: Dispatcher,
+                 bundle: EstimatorBundle, tiers: Sequence[Tier],
+                 cfg: PipelineConfig = PipelineConfig()):
+        self.router = router
+        self.dispatcher = dispatcher
+        self.bundle = bundle
+        self.tiers = list(tiers)
+        self.cfg = cfg
+        self.sim: Optional[ClusterSim] = None
+        self.queue: List[Request] = []
+        self.busy_servers = 0
+        self.n_servers = (1 if cfg.deployment in ("serial", "microbatch")
+                          else cfg.n_workers)
+
+    def attach(self, sim: ClusterSim):
+        self.sim = sim
+
+    # -- arrival ------------------------------------------------------------
+    def enqueue(self, req: Request, t: float):
+        cap = self.cfg.queue_capacity
+        if cap is not None and len(self.queue) >= cap:
+            req.failed = True
+            self.sim.completed.append(req)
+            return
+        self.queue.append(req)
+        self._drain(t)
+
+    # -- scoring station -----------------------------------------------------
+    def _service_time(self, n: int) -> float:
+        if self.cfg.deployment == "microbatch":
+            return self.cfg.microbatch_time
+        return self.router.serial_scoring_s
+
+    def _drain(self, t: float):
+        while self.queue and self.busy_servers < self.n_servers:
+            if self.cfg.deployment == "microbatch":
+                n = min(len(self.queue), self.cfg.microbatch_size)
+            elif self.cfg.deployment == "concurrent":
+                # micro-batched off the scheduling loop: each worker takes
+                # a small group; scoring latency ~ serial per forward but
+                # workers overlap
+                n = min(len(self.queue),
+                        max(1, len(self.queue) // self.n_servers))
+                n = min(n, 8)
+            else:
+                n = 1
+            group = self.queue[:n]
+            self.queue = self.queue[n:]
+            self.busy_servers += 1
+            dt = self._service_time(n)
+            self.sim.push(t + dt, lambda tt, g=group: self._scored(g, tt))
+
+    def _scored(self, group: List[Request], t: float):
+        self.busy_servers -= 1
+        toks = _pad_tokens([r.prompt.tokens for r in group],
+                           self.bundle.encoder.max_len)
+        lens = np.array([min(len(r.prompt.tokens),
+                             self.bundle.encoder.max_len) for r in group])
+        emb = self.bundle.encoder.encode(toks, lens)
+        models = self.router.route(emb)
+        _, L = self.bundle.knn.query(emb)
+        tel = self.sim.telemetry()
+        for j, req in enumerate(group):
+            req.router_queue_wait = t - req.arrival
+            m = int(models[j])
+            cands = [i for i in self.sim.alive_instances()
+                     if m < 0 or i.model_idx == m]
+            if not cands:
+                cands = self.sim.alive_instances()
+            pick = self.dispatcher.pick(cands, tel)
+            inst = cands[pick]
+            pred = float(L[j, inst.model_idx])
+            mt = None
+            if self.cfg.budget_clamp:
+                mt = max_tokens_clamp(req.budget, req.prompt.len_in,
+                                      inst.tier.price_in,
+                                      inst.tier.price_out)
+            inst.submit(req, t, pred, mt)
+        self._drain(t)

@@ -1,0 +1,236 @@
+"""RouteBalance: the fused routing + load-balancing scheduler (§4).
+
+Per fired batch: one batched embed+KNN call gives prompt-intrinsic Q̂/L̂
+for every candidate model; per-tier TPOT heads + dead-reckoned instance
+state give the state-dependent T̂; the LPT-ordered greedy pass maximizes
+Eq. 1 per request, updating the local instance view after each dispatch.
+Batch formation is adaptive (larger when the cluster is busy). The
+off-instance residual decomposition (compute / batch wait / stats fetch)
+is charged onto every request exactly as the paper reports it (Table 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.estimators.embedding import SentenceEncoder
+from repro.estimators.knn import KNNEstimator
+from repro.estimators.latency import LatencyHead, tpot_features
+from repro.serving.cluster import ClusterSim, Instance
+from repro.serving.request import Request
+from repro.serving.tiers import Tier
+
+from .assignment import greedy_assign, lpt_order
+from .budget import admission_mask, max_tokens_clamp
+from .weights import PRESETS, Weights, validate
+
+
+@dataclasses.dataclass
+class RBConfig:
+    weights: Weights = PRESETS["uniform"]
+    base_window: float = 0.10          # batch formation window (s)
+    adaptive: bool = True
+    lpt: bool = True
+    fixed_batch: Optional[int] = None  # fixed-size batching ablation
+    budget_filter: bool = True
+    latency_mode: str = "full"         # full|off_reactive|off_predictive|
+    #                                    static_prior (§6.3 arms)
+    learned_tpot: bool = True
+    knn_k: int = 10
+    charge_compute: bool = True        # charge measured decision time
+
+
+class EstimatorBundle:
+    """The in-process predictor stack: encoder + KNN + per-tier heads."""
+
+    def __init__(self, encoder: SentenceEncoder, knn: KNNEstimator,
+                 heads: Dict[str, LatencyHead], model_names: List[str]):
+        self.encoder = encoder
+        self.knn = knn
+        self.heads = heads
+        self.model_names = model_names
+
+    @staticmethod
+    def train(dataset, tiers: Sequence[Tier], model_names: List[str],
+              k: int = 10, backend: str = "jax",
+              seed: int = 0) -> "EstimatorBundle":
+        enc = SentenceEncoder(seed=7)
+        prompts, Q, L = dataset.split("train")
+        toks = _pad_tokens([p.tokens for p in prompts], enc.max_len)
+        lens = np.array([min(len(p.tokens), enc.max_len) for p in prompts])
+        emb = []
+        for i in range(0, len(prompts), 512):
+            emb.append(enc.encode(toks[i:i + 512], lens[i:i + 512]))
+        emb = np.concatenate(emb)
+        knn = KNNEstimator(k=k, backend=backend).fit(emb, Q, L)
+        heads = {}
+        rng = np.random.default_rng(seed)
+        for t in tiers:
+            X, y = _tier_sweep(t, rng)
+            heads[t.name] = LatencyHead(
+                t.name, nominal_tpot=t.tpot(8, 500)).fit(X, y)
+        return EstimatorBundle(enc, knn, heads, model_names)
+
+    def predict_prompts(self, reqs: Sequence[Request]
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        toks = _pad_tokens([r.prompt.tokens for r in reqs],
+                           self.encoder.max_len)
+        lens = np.array([min(len(r.prompt.tokens), self.encoder.max_len)
+                         for r in reqs])
+        emb = self.encoder.encode(toks, lens)
+        return self.knn.query(emb)
+
+
+def _pad_tokens(token_lists, max_len: int) -> np.ndarray:
+    out = np.zeros((len(token_lists), max_len), np.int32)
+    for i, t in enumerate(token_lists):
+        n = min(len(t), max_len)
+        out[i, :n] = t[:n]
+    return out
+
+
+def _tier_sweep(tier: Tier, rng) -> Tuple[np.ndarray, np.ndarray]:
+    """Tier-local QPS sweep -> (features, true TPOT) training pairs."""
+    rows, ys = [], []
+    for _ in range(2000):
+        b = rng.integers(1, tier.max_batch + 1)
+        ctx = rng.uniform(32, 2048)
+        pend = b * rng.uniform(8, 600)
+        rows.append(tpot_features(b, pend, ctx))
+        ys.append(tier.tpot(b, ctx) * np.exp(rng.normal(0, 0.03)))
+    return np.stack(rows), np.asarray(ys, np.float32)
+
+
+class RouteBalance:
+    """Event-driven scheduler over a ClusterSim."""
+
+    def __init__(self, cfg: RBConfig, bundle: EstimatorBundle,
+                 tiers: Sequence[Tier]):
+        self.cfg = cfg
+        validate(cfg.weights)
+        self.bundle = bundle
+        self.tiers = list(tiers)
+        self.waiting: List[Request] = []
+        self.sim: Optional[ClusterSim] = None
+        self._measured_compute = 0.004  # warm estimate, updated online
+        self.decisions = 0
+        self.batches = 0
+        self.expected: Optional[int] = None   # stop firing once all served
+        self.compute_log: List[Tuple[int, float]] = []
+
+    # -- wiring ---------------------------------------------------------------
+    def attach(self, sim: ClusterSim):
+        self.sim = sim
+        sim.push(self.cfg.base_window, self._fire)
+
+    def enqueue(self, req: Request, t: float):
+        self.waiting.append(req)
+
+    # -- scheduling -----------------------------------------------------------
+    def _window(self) -> float:
+        if not self.cfg.adaptive:
+            return self.cfg.base_window
+        inst = self.sim.alive_instances()
+        busy = np.mean([min(i.snapshot["batch_size"]
+                            / max(i.tier.max_batch, 1), 1.0)
+                        for i in inst]) if inst else 0.0
+        return float(np.clip(self.cfg.base_window * (0.4 + 1.8 * busy),
+                             0.04, 0.30))
+
+    def _fire(self, t: float):
+        batch = self.waiting
+        if self.cfg.fixed_batch:
+            batch = batch[:self.cfg.fixed_batch]
+        self.waiting = self.waiting[len(batch):]
+        if batch:
+            t0 = time.perf_counter()
+            self._decide(batch, t)
+            dt_meas = time.perf_counter() - t0
+            self._measured_compute = (0.8 * self._measured_compute
+                                      + 0.2 * dt_meas)
+            self.compute_log.append((len(batch), dt_meas))
+        if (self.expected is not None and not self.waiting
+                and self.decisions >= self.expected):
+            return                          # all requests dispatched
+        self.sim.push(t + self._window(), self._fire)
+
+    def _decide(self, batch: List[Request], t: float):
+        cfg = self.cfg
+        instances = self.sim.alive_instances()
+        I = len(instances)
+        R = len(batch)
+        model_names = self.bundle.model_names
+        m_of_i = np.array([inst.model_idx for inst in instances])
+        tiers_of_i = [inst.tier for inst in instances]
+
+        # 1. batched prompt-intrinsic estimation (one call)
+        Q, L = self.bundle.predict_prompts(batch)        # (R, M)
+        q_inst = Q[:, m_of_i]                            # (R, I)
+        l_inst = L[:, m_of_i]
+
+        # 2. telemetry seed (non-blocking snapshots)
+        tel = [inst.telemetry() for inst in instances]
+        d = np.array([s["pending_decode"] for s in tel])
+        b = np.array([max(s["batch_size"], 1) for s in tel])
+        free = np.array([s["free_slots"] for s in tel], float)
+        ctx = np.array([max(s["mean_ctx"], 64.0) for s in tel])
+        maxb = np.array([inst.tier.max_batch for inst in instances],
+                        float)
+
+        # 3. one TPOT-head call per TIER (not per instance)
+        tpot = np.zeros(I)
+        if cfg.latency_mode == "static_prior":
+            tpot = np.array([self.bundle.heads[ti.name].nominal_tpot
+                             for ti in tiers_of_i])
+        else:
+            by_tier: Dict[str, List[int]] = {}
+            for i, ti in enumerate(tiers_of_i):
+                by_tier.setdefault(ti.name, []).append(i)
+            for tname, idxs in by_tier.items():
+                feats = np.stack([
+                    tpot_features(b[i], d[i], ctx[i]) for i in idxs])
+                tpot[idxs] = self.bundle.heads[tname].tpot_batch(
+                    feats, learned=cfg.learned_tpot)
+
+        # 4. budget admission filter (Eq. 2)
+        price_in = np.array([ti.price_in for ti in tiers_of_i])
+        price_out = np.array([ti.price_out for ti in tiers_of_i])
+        budgets = np.array([np.nan if r.budget is None else r.budget
+                            for r in batch])
+        len_in = np.array([r.prompt.len_in for r in batch], float)
+        if cfg.budget_filter:
+            allowed, c_hat = admission_mask(budgets, len_in, l_inst,
+                                            price_in, price_out)
+        else:
+            allowed = np.ones((R, I), bool)
+            c_hat = (len_in[:, None] * price_in[None, :]
+                     + l_inst * price_out[None, :]) / 1e6
+
+        # 5. LPT-ordered greedy with dead reckoning
+        order = lpt_order(L.max(axis=1), enable=cfg.lpt)
+        nominal = np.array([self.bundle.heads[ti.name].nominal_tpot
+                            for ti in tiers_of_i])
+        choice, _ = greedy_assign(
+            order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
+            cfg.weights, allowed, latency_mode=cfg.latency_mode,
+            nominal_tpot=nominal)
+
+        # 6. dispatch + residual accounting
+        compute = self._measured_compute if cfg.charge_compute else 0.0
+        stats = 0.0005 * I / 13                       # non-blocking fetch
+        per_req_compute = compute / max(R, 1) + compute * 0.2
+        now = t + compute + stats
+        for r_idx, req in enumerate(batch):
+            i = int(choice[r_idx])
+            inst = instances[i]
+            req.sched_compute = per_req_compute
+            req.sched_stats_fetch = stats
+            req.sched_batch_wait = max(t - req.arrival, 0.0)
+            mt = max_tokens_clamp(req.budget, req.prompt.len_in,
+                                  inst.tier.price_in, inst.tier.price_out)
+            inst.submit(req, now, float(l_inst[r_idx, i]), mt)
+            self.decisions += 1
+        self.batches += 1

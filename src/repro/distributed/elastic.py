@@ -1,0 +1,84 @@
+"""Elastic serving-cluster membership + straggler handling.
+
+The scheduler's view of the cluster is a registry of instances with
+heartbeat timestamps. Instances that miss heartbeats are quarantined
+(stop receiving traffic) and re-admitted when they return — scale-up is
+just registration (the KNN estimator and per-tier heads are tier-local,
+so no retraining; §6.8's tier-loss result is the degenerate case).
+Straggler mitigation: telemetry staleness inflates an instance's
+dead-reckoned pending work, so slow/unresponsive instances organically
+stop attracting traffic before the hard timeout trips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MemberState:
+    iid: str
+    tier: str
+    last_heartbeat: float
+    quarantined: bool = False
+    dispatches: int = 0
+
+
+class ElasticMembership:
+    def __init__(self, heartbeat_timeout: float = 5.0,
+                 staleness_decay: float = 2.0):
+        self.timeout = heartbeat_timeout
+        self.decay = staleness_decay
+        self.members: Dict[str, MemberState] = {}
+
+    def register(self, iid: str, tier: str, now: float):
+        self.members[iid] = MemberState(iid, tier, now)
+
+    def deregister(self, iid: str):
+        self.members.pop(iid, None)
+
+    def heartbeat(self, iid: str, now: float):
+        m = self.members.get(iid)
+        if m:
+            m.last_heartbeat = now
+            m.quarantined = False
+
+    def active(self, now: float) -> List[str]:
+        out = []
+        for m in self.members.values():
+            if now - m.last_heartbeat > self.timeout:
+                m.quarantined = True
+            if not m.quarantined:
+                out.append(m.iid)
+        return out
+
+    def staleness_penalty(self, iid: str, now: float) -> float:
+        """Multiplier (>= 1) applied to dead-reckoned pending work: a
+        straggling instance looks increasingly loaded as its telemetry
+        ages, shedding traffic before the quarantine timeout."""
+        m = self.members.get(iid)
+        if m is None:
+            return float("inf")
+        age = max(now - m.last_heartbeat, 0.0)
+        return 1.0 + self.decay * age / max(self.timeout, 1e-9)
+
+    # -- scheduler-state persistence (restart-safe scheduling layer) -----
+    def save(self, path: str):
+        data = {iid: dataclasses.asdict(m)
+                for iid, m in self.members.items()}
+        p = pathlib.Path(path)
+        tmp = p.with_suffix(".tmp")
+        tmp.write_text(json.dumps(data))
+        tmp.rename(p)
+
+    @classmethod
+    def load(cls, path: str, **kw) -> "ElasticMembership":
+        em = cls(**kw)
+        data = json.loads(pathlib.Path(path).read_text())
+        for iid, m in data.items():
+            em.members[iid] = MemberState(**m)
+        return em

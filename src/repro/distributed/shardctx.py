@@ -1,0 +1,51 @@
+"""Sharding context: lets distribution-agnostic model code pick up
+mesh-aware sharding constraints when lowered by the launcher.
+
+Model code calls ``constrain(x, "residual")`` etc. — a no-op unless a
+``sharding_rules(mesh, residual=P(...))`` context is active (so CPU unit
+tests and the serving engine run the exact same code with zero overhead).
+``current()`` exposes (mesh, rules) so layers that need ``shard_map``
+(e.g. the data-local MoE dispatch) can build it.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE: Dict[str, Any] = {"mesh": None, "rules": {}}
+
+
+def current() -> Tuple[Optional[jax.sharding.Mesh], Dict[str, P]]:
+    return _STATE["mesh"], _STATE["rules"]
+
+
+def active() -> bool:
+    return _STATE["mesh"] is not None
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh, **rules):
+    old = (_STATE["mesh"], _STATE["rules"])
+    _STATE["mesh"], _STATE["rules"] = mesh, dict(rules)
+    try:
+        yield
+    finally:
+        _STATE["mesh"], _STATE["rules"] = old
+
+
+def constrain(x, name: str):
+    mesh, rules = current()
+    if mesh is None or name not in rules or rules[name] is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, rules[name]))
+
+
+def batch_axes(mesh=None) -> Tuple[str, ...]:
+    mesh = mesh if mesh is not None else _STATE["mesh"]
+    if mesh is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

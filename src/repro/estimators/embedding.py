@@ -1,0 +1,95 @@
+"""CPU-resident sentence encoder — the all-MiniLM-L6-v2 stand-in.
+
+A small frozen transformer encoder (random features): hashed token
+embeddings -> 2 encoder layers -> masked mean-pool -> L2 normalize. Frozen
+random transformers preserve input similarity structure (random-features
+kernel), which is all the KNN estimator needs; the interface matches the
+paper's contract — one batched call per scheduler batch, embeddings
+reused across every candidate model (§4.2).
+
+The scoring hot path ``encode()`` is jitted once; the Pallas knn_topk
+kernel consumes its output.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class SentenceEncoder:
+    def __init__(self, dim: int = 128, hidden: int = 128, n_layers: int = 2,
+                 n_heads: int = 4, hash_vocab: int = 4096, seed: int = 7,
+                 max_len: int = 128):
+        self.dim = dim
+        self.hidden = hidden
+        self.max_len = max_len
+        self.hash_vocab = hash_vocab
+        key = jax.random.key(seed)
+        ks = jax.random.split(key, 4 + 4 * n_layers)
+        s = hidden ** -0.5
+        self.params = {
+            "embed": jax.random.normal(ks[0], (hash_vocab, hidden)) * s,
+            "pos": jax.random.normal(ks[1], (max_len, hidden)) * s * 0.1,
+            "out": jax.random.normal(ks[2], (hidden, dim)) * s,
+            "layers": [],
+        }
+        self.n_heads = n_heads
+        for i in range(n_layers):
+            k = ks[4 + i]
+            sub = jax.random.split(k, 6)
+            self.params["layers"].append({
+                "wq": jax.random.normal(sub[0], (hidden, hidden)) * s,
+                "wk": jax.random.normal(sub[1], (hidden, hidden)) * s,
+                "wv": jax.random.normal(sub[2], (hidden, hidden)) * s,
+                "wo": jax.random.normal(sub[3], (hidden, hidden)) * s,
+                "w1": jax.random.normal(sub[4], (hidden, 2 * hidden)) * s,
+                "w2": jax.random.normal(sub[5], (2 * hidden, hidden))
+                      * (2 * hidden) ** -0.5,
+            })
+        self._encode = jax.jit(self._encode_impl)
+
+    def _encode_impl(self, tokens, mask):
+        """tokens: (B, L) int32 (already hashed); mask: (B, L) bool."""
+        p = self.params
+        h = p["embed"][tokens % self.hash_vocab] + p["pos"][None,
+                                                            :tokens.shape[1]]
+        mf = mask[..., None].astype(h.dtype)
+        B, L, D = h.shape
+        nh = self.n_heads
+        hd = D // nh
+        for lp in p["layers"]:
+            q = (h @ lp["wq"]).reshape(B, L, nh, hd)
+            k = (h @ lp["wk"]).reshape(B, L, nh, hd)
+            v = (h @ lp["wv"]).reshape(B, L, nh, hd)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * hd ** -0.5
+            s = jnp.where(mask[:, None, None, :], s, -1e30)
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, L, D)
+            h = h + o @ lp["wo"]
+            h = h + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+            h = h * jax.lax.rsqrt(
+                jnp.mean(jnp.square(h), -1, keepdims=True) + 1e-6)
+        pooled = (h * mf).sum(1) / jnp.maximum(mf.sum(1), 1.0)
+        e = pooled @ p["out"]
+        return e / jnp.maximum(jnp.linalg.norm(e, axis=-1, keepdims=True),
+                               1e-6)
+
+    def encode(self, tokens: np.ndarray,
+               lengths: Optional[np.ndarray] = None) -> np.ndarray:
+        """tokens: (B, L) int; lengths: (B,). One batched call (§4.2)."""
+        tokens = np.asarray(tokens)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        L = min(tokens.shape[1], self.max_len)
+        tokens = tokens[:, :L]
+        if lengths is None:
+            mask = np.ones(tokens.shape, bool)
+        else:
+            mask = np.arange(L)[None, :] < np.asarray(lengths)[:, None]
+        out = self._encode(jnp.asarray(tokens, jnp.int32),
+                           jnp.asarray(mask))
+        return np.asarray(out)

@@ -1,0 +1,115 @@
+"""Distance-weighted KNN quality + output-length estimator (FAISS stand-in).
+
+One lookup over the training split returns, for every candidate model, a
+predicted quality in [0,1] and an expected output length (§4.2). The
+interface is metric-agnostic: labels are whatever per-(prompt, model)
+scores the operator supplies.
+
+Backends:
+  * numpy  — exact brute force (default off the hot path)
+  * jax    — jitted matmul + lax.top_k (the batched hot path)
+  * pallas — fused distance+top-k kernel (repro.kernels.knn_topk), used
+             when available; validated against the jnp oracle in tests.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class KNNEstimator:
+    def __init__(self, k: int = 10, backend: str = "jax",
+                 eps: float = 1e-6):
+        self.k = k
+        self.backend = backend
+        self.eps = eps
+        self._x: Optional[np.ndarray] = None          # (N, E)
+        self._quality: Optional[np.ndarray] = None    # (N, M)
+        self._length: Optional[np.ndarray] = None     # (N, M)
+        self._jq = None
+
+    # -- index build ---------------------------------------------------------
+    def fit(self, embeddings: np.ndarray, quality: np.ndarray,
+            lengths: np.ndarray):
+        self._x = np.ascontiguousarray(embeddings, np.float32)
+        self._quality = np.asarray(quality, np.float32)
+        self._length = np.asarray(lengths, np.float32)
+        self._sq = (self._x ** 2).sum(-1)
+        self._jq = None
+        return self
+
+    @property
+    def n_models(self) -> int:
+        return self._quality.shape[1]
+
+    # -- query ----------------------------------------------------------------
+    def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """q: (B, E) -> (quality (B, M), length (B, M))."""
+        if self.backend == "jax":
+            return self._query_jax(q)
+        if self.backend == "pallas":
+            return self._query_pallas(q)
+        return self._query_np(q)
+
+    def _weights(self, d2, idx):
+        w = 1.0 / (np.sqrt(np.maximum(d2, 0.0)) + self.eps)
+        w = w / w.sum(-1, keepdims=True)
+        return w
+
+    def _query_np(self, q):
+        q = np.asarray(q, np.float32)
+        d2 = self._sq[None, :] - 2.0 * q @ self._x.T \
+            + (q ** 2).sum(-1, keepdims=True)
+        idx = np.argpartition(d2, self.k, axis=1)[:, :self.k]
+        d2k = np.take_along_axis(d2, idx, axis=1)
+        order = np.argsort(d2k, axis=1)
+        idx = np.take_along_axis(idx, order, axis=1)
+        d2k = np.take_along_axis(d2k, order, axis=1)
+        w = self._weights(d2k, idx)
+        qual = (self._quality[idx] * w[..., None]).sum(1)
+        leng = (self._length[idx] * w[..., None]).sum(1)
+        return qual, leng
+
+    def _build_jax(self):
+        import jax
+        import jax.numpy as jnp
+        x = jnp.asarray(self._x)
+        sq = jnp.asarray(self._sq)
+        qual = jnp.asarray(self._quality)
+        leng = jnp.asarray(self._length)
+        k, eps = self.k, self.eps
+
+        @jax.jit
+        def run(q):
+            d2 = sq[None, :] - 2.0 * q @ x.T \
+                + jnp.sum(q * q, -1, keepdims=True)
+            neg, idx = jax.lax.top_k(-d2, k)
+            d2k = -neg
+            w = 1.0 / (jnp.sqrt(jnp.maximum(d2k, 0.0)) + eps)
+            w = w / w.sum(-1, keepdims=True)
+            return ((qual[idx] * w[..., None]).sum(1),
+                    (leng[idx] * w[..., None]).sum(1))
+        return run
+
+    def _query_jax(self, q):
+        import jax.numpy as jnp
+        if self._jq is None:
+            self._jq = self._build_jax()
+        qa, la = self._jq(jnp.asarray(q, jnp.float32))
+        return np.asarray(qa), np.asarray(la)
+
+    def _query_pallas(self, q):
+        from repro.kernels import knn_ops
+        if self._jq is None:
+            self._jq = knn_ops.build_query(
+                self._x, self._quality, self._length, self.k, self.eps)
+        qa, la = self._jq(np.asarray(q, np.float32))
+        return np.asarray(qa), np.asarray(la)
+
+    # -- diagnostics ----------------------------------------------------------
+    def best_model_accuracy(self, q_emb, true_quality) -> float:
+        qual, _ = self.query(q_emb)
+        return float((qual.argmax(1)
+                      == np.asarray(true_quality).argmax(1)).mean())

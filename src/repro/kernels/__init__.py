@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the perf-critical hot spots:
+#   knn_topk         — the paper's batched estimator lookup (§4.2/§6.3)
+#   decode_attention — flash-decoding GQA step (serving substrate)
+#   ssd_scan         — mamba2 SSD chunked scan (assigned arch)
+# ops.py = jit'd wrappers; ref.py = pure-jnp oracles.
+from . import ops as knn_ops  # noqa: F401  (KNNEstimator pallas backend)
+from .ops import decode_attention, knn_topk, ssd_scan  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: GQA single-token decode attention, KV-blocked.
+
+Decode is KV-bandwidth-bound: per step the cache is read once and q is a
+single token. The kernel streams the (B, C, K, d) cache through VMEM
+tiles along C (flash-decoding), maintaining the online-softmax
+(m, l, acc) state in VMEM scratch across the sequential grid axis; GQA is
+native (no head repetition — repeating would multiply HBM reads by
+H/K). One kv-head per grid row keeps every dot 2D-ish for the MXU.
+
+Grid: (K, C/tile). Scratch m,l: (B, g); acc: (B, g, d).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, cpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, window: int, tile: int, scale: float):
+    c = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...][:, 0]                  # (B, g, d)
+    kt = k_ref[...][:, :, 0]              # (B, T, d)
+    vt = v_ref[...][:, :, 0]              # (B, T, d)
+    cpos = cpos_ref[...]                  # (1, T)
+    pos = pos_ref[0]
+
+    s = jax.lax.dot_general(
+        q, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale        # (B, g, T)
+    valid = (cpos >= 0) & (cpos <= pos)
+    if window > 0:
+        valid &= cpos > pos - window
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])                      # (B, g, T)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(vt.dtype), vt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                # (B, g, d)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+    m_ref[...] = m_new
+
+    @pl.when(c == nc - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l[..., None])[:, None].astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "tile", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_positions, pos, *,
+                     window: int = 0, tile: int = 512,
+                     interpret: bool = True):
+    """q: (B, H, d); caches: (B, C, K, d); cache_positions: (C,) int32;
+    pos: scalar int32. Returns (B, H, d)."""
+    B, H, d = q.shape
+    _, C, K, _ = k_cache.shape
+    g = H // K
+    tile = min(tile, C)
+    pad = (-C) % tile
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, padw)
+        v_cache = jnp.pad(v_cache, padw)
+        cache_positions = jnp.pad(cache_positions, (0, pad),
+                                  constant_values=-1)
+    Cp = k_cache.shape[1]
+    grid = (K, Cp // tile)
+    out = pl.pallas_call(
+        functools.partial(_kernel, window=window, tile=tile,
+                          scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, c: (0,)),
+            pl.BlockSpec((B, 1, g, d), lambda h, c: (0, h, 0, 0)),
+            pl.BlockSpec((B, tile, 1, d), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((B, tile, 1, d), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((1, tile), lambda h, c: (0, c)),
+        ],
+        out_specs=pl.BlockSpec((B, 1, g, d), lambda h, c: (0, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, g), jnp.float32),
+            pltpu.VMEM((B, g), jnp.float32),
+            pltpu.VMEM((B, g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32)[None],
+      q.reshape(B, K, g, d), k_cache, v_cache, cache_positions[None, :])
+    return out.reshape(B, H, d)

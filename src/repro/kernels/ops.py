@@ -1,0 +1,55 @@
+"""Jitted public wrappers over the Pallas kernels.
+
+``interpret=True`` everywhere in this container (CPU): the kernel bodies
+execute in Python for correctness validation; on TPU set interpret=False
+(the BlockSpecs are written for VMEM/MXU tiling).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .decode_attention import decode_attention as decode_attention_kernel
+from .knn_topk import knn_topk as knn_topk_kernel
+from .ssd_scan import ssd_scan as ssd_scan_kernel
+
+INTERPRET = True   # flip on real TPU
+
+
+def knn_topk(q, x, k: int = 10, tile: int = 512):
+    return knn_topk_kernel(q, x, k=k, tile=tile, interpret=INTERPRET)
+
+
+def decode_attention(q, k_cache, v_cache, cache_positions, pos,
+                     window: int = 0, tile: int = 512):
+    return decode_attention_kernel(q, k_cache, v_cache, cache_positions,
+                                   pos, window=window, tile=tile,
+                                   interpret=INTERPRET)
+
+
+def ssd_scan(xh, Bm, Cm, dt, A, chunk: int = 128, head_tile: int = 8):
+    return ssd_scan_kernel(xh, Bm, Cm, dt, A, chunk=chunk,
+                           head_tile=head_tile, interpret=INTERPRET)
+
+
+# -- KNN estimator backend ---------------------------------------------------
+
+def build_query(x: np.ndarray, quality: np.ndarray, lengths: np.ndarray,
+                k: int, eps: float):
+    """Returns a callable (B, E) -> (quality (B, M), length (B, M)) using
+    the fused Pallas distance+top-k kernel."""
+    xj = jnp.asarray(x, jnp.float32)
+    qualj = jnp.asarray(quality, jnp.float32)
+    lenj = jnp.asarray(lengths, jnp.float32)
+
+    @jax.jit
+    def run(q):
+        d2, idx = knn_topk_kernel(q, xj, k=k, interpret=INTERPRET)
+        w = 1.0 / (jnp.sqrt(jnp.maximum(d2, 0.0)) + eps)
+        w = w / w.sum(-1, keepdims=True)
+        return ((qualj[idx] * w[..., None]).sum(1),
+                (lenj[idx] * w[..., None]).sum(1))
+    return run

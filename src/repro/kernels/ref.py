@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_topk_ref(q, x, k: int = 10):
+    """Exact top-k smallest squared L2 distances. -> (d2 (B,k), idx)."""
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, 1, keepdims=True)
+          + jnp.sum(x * x, 1)[None, :]
+          - 2.0 * q @ x.T)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx.astype(jnp.int32)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_positions, pos,
+                         window: int = 0):
+    """GQA decode attention; mirrors models.attention.decode_attention
+    but takes q (B, H, d) and returns (B, H, d)."""
+    from repro.models.attention import decode_attention
+    o = decode_attention(q[:, None], k_cache, v_cache, cache_positions,
+                         pos, window=window)
+    return o[:, 0]
+
+
+def ssd_scan_ref(xh, Bm, Cm, dt, A, chunk: int):
+    """Chunked SSD (mamba2) oracle; mirrors models.blocks._ssd_chunked
+    with heads already expanded. Returns (y, final_state)."""
+    from repro.models.blocks import _ssd_chunked
+    B, S, nh, P = xh.shape
+    init = jnp.zeros((B, nh, P, Bm.shape[-1]), jnp.float32)
+    # _ssd_chunked expects group dim; here Bm/Cm are (B, S, G, N)
+    return _ssd_chunked(xh, Bm, Cm, dt, A, chunk, init)
+
+
+def ssd_recurrent_ref(xh, Bm, Cm, dt, A):
+    """Token-by-token linear recurrence (the SSD ground truth):
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ; y_t = C_t . h_t.
+    xh: (B,S,nh,P); Bm/Cm: (B,S,nh,N); dt: (B,S,nh); A: (nh,)."""
+    B, S, nh, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, B_t, C_t, dt_t = inp
+        dA = jnp.exp(dt_t * A)[..., None, None]          # (B,nh,1,1)
+        h = h * dA + jnp.einsum("bhp,bhn,bh->bhpn",
+                                x_t.astype(jnp.float32), B_t, dt_t)
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xh, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(dt, 1, 0))
+    h0 = jnp.zeros((B, nh, P, N), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), hT

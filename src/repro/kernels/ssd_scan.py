@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan (forward).
+
+State-space duality: within a chunk of Q tokens the recurrence is a
+masked (B,h,Q,Q) attention-like product (MXU work); across chunks a
+(B,h,P,N) state is carried. The chunk axis is the sequential grid axis;
+the carried state lives in VMEM scratch. Heads are tiled on their own
+grid axis so the working set (xq, Bq, Cq, L, state) stays within VMEM:
+per (head-tile, chunk) step the VMEM footprint is
+  hb*(Q*P + 2*Q*N + Q + Q*Q + P*N) floats — hardware-aligned for
+Q=P=64..128, N=128.
+
+Inputs are per-head expanded: xh (B,S,nh,P), Bm/Cm (B,S,nh,N),
+dt (B,S,nh); A (nh,). Output y (B,S,nh,P) + final state (B,nh,P,N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(xh_ref, b_ref, c_ref, dt_ref, a_ref, y_ref, state_out_ref,
+            state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xq = xh_ref[...]        # (B, Q, hb, P)
+    Bq = b_ref[...]         # (B, Q, hb, N)
+    Cq = c_ref[...]         # (B, Q, hb, N)
+    dtq = dt_ref[...].astype(jnp.float32)      # (B, Q, hb)
+    A = a_ref[...].astype(jnp.float32)         # (1, hb)
+
+    dA = dtq * A[None]                          # (B, Q, hb)
+    dA_t = jnp.moveaxis(dA, 1, 2)               # (B, hb, Q)
+    cum = jnp.cumsum(dA_t, axis=-1)
+    Q = xq.shape[1]
+    seg = cum[..., :, None] - cum[..., None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(mask[None, None], jnp.exp(seg), 0.0)    # (B,hb,Q,Q)
+
+    scores = jnp.einsum("bqhn,bkhn->bhqk", Cq.astype(jnp.float32),
+                        Bq.astype(jnp.float32))
+    M = scores * L * jnp.moveaxis(dtq, 1, 2)[:, :, None, :]
+    y_intra = jnp.einsum("bhqk,bkhp->bqhp", M, xq.astype(jnp.float32))
+
+    state = state_ref[...]                      # (B, hb, P, N)
+    decay_in = jnp.exp(cum)                     # (B, hb, Q)
+    y_inter = jnp.einsum(
+        "bqhn,bhpn->bqhp",
+        Cq.astype(jnp.float32) * jnp.moveaxis(decay_in, 1, 2)[..., None],
+        state)
+    y_ref[...] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    decay_out = jnp.exp(cum[..., -1:] - cum)    # (B, hb, Q)
+    contrib = dtq * jnp.moveaxis(decay_out, 1, 2)
+    st = jnp.einsum("bqhn,bqhp,bqh->bhpn", Bq.astype(jnp.float32),
+                    xq.astype(jnp.float32), contrib)
+    state = state * jnp.exp(cum[..., -1])[..., None, None] + st
+    state_ref[...] = state
+
+    @pl.when(ci == nc - 1)
+    def _fin():
+        state_out_ref[...] = state_ref[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "head_tile", "interpret"))
+def ssd_scan(xh, Bm, Cm, dt, A, *, chunk: int = 128,
+             head_tile: int = 8, interpret: bool = True):
+    """xh: (B,S,nh,P); Bm/Cm: (B,S,nh,N); dt: (B,S,nh); A: (nh,).
+    Returns (y (B,S,nh,P) f32->xh.dtype, final_state (B,nh,P,N) f32)."""
+    B, S, nh, P = xh.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to the chunk size"
+    hb = min(head_tile, nh)
+    assert nh % hb == 0
+    grid = (nh // hb, S // chunk)
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, chunk, hb, P), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((B, chunk, hb, N), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((B, chunk, hb, N), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((B, chunk, hb), lambda h, c: (0, c, h)),
+            pl.BlockSpec((1, hb), lambda h, c: (0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, chunk, hb, P), lambda h, c: (0, c, h, 0)),
+            pl.BlockSpec((B, hb, P, N), lambda h, c: (0, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, nh, P), xh.dtype),
+            jax.ShapeDtypeStruct((B, nh, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((B, hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xh, Bm, Cm, dt.astype(jnp.float32), A[None].astype(jnp.float32))
+    return y, state

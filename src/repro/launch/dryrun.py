@@ -1,0 +1,239 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # XLA:CPU hoists loop-invariant converts/iotas out of scan loops,
+    # materializing stacked f32 copies of the residual stream (observed:
+    # 14 GB convert hoists on gemma3-27b). TPU compilation bounds such
+    # hoists by HBM budget; disabling the expensive-LICM pass makes the
+    # CPU-proxy memory_analysis reflect the memory-lean schedule.
+    "--xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion,"
+    "while-loop-invariant-code-motion,convert-mover")
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (arch x shape) cell on the production meshes
+(16x16 single-pod and 2x16x16 multi-pod) using ShapeDtypeStructs only, and
+records memory analysis, cost analysis, and the collective schedule parsed
+from the optimized HLO. Results are cached as JSON under runs/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--jobs 1]
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import gzip
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+RUNS = pathlib.Path(__file__).resolve().parents[3] / "runs" / "dryrun"
+REPO = pathlib.Path(__file__).resolve().parents[3]
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|[a-z0-9\[\],{}:#*\s/_.-])*?)"
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|c64)"
+                       r"\[([\d,]*)\]")
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+# Link-traffic factor per collective kind (ring algorithms, per device):
+#   all-gather: sends ~(n-1)/n of the OUTPUT; all-reduce: 2x input
+#   (reduce-scatter + all-gather); reduce-scatter / all-to-all /
+#   collective-permute: ~1x input.
+_FACTORS = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device collective link bytes from post-SPMD optimized HLO."""
+    out = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"= ([^=]*?)\b(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        # result type(s) precede the op name
+        result_bytes = _shape_bytes(m.group(1))
+        if kind in ("all-reduce", "reduce-scatter", "all-to-all",
+                    "collective-permute"):
+            ref_bytes = result_bytes  # result ~ input for these
+        else:
+            ref_bytes = result_bytes  # all-gather: result = gathered output
+        d = out.setdefault(kind, {"count": 0, "bytes": 0.0,
+                                  "link_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += ref_bytes
+        d["link_bytes"] += ref_bytes * _FACTORS[kind]
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides=None) -> dict:
+    import jax
+    from repro.configs import get_config, skip_reason
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import lower_cell
+    from repro.models.config import SHAPES
+
+    t0 = time.time()
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shape = SHAPES[shape_name]
+    with mesh:
+        lowered, meta = lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    # trip-count-aware walk (xla cost_analysis counts while bodies once)
+    sys.path.insert(0, str(REPO))
+    from benchmarks.hlo_cost import analyze as hlo_analyze
+    walk = hlo_analyze(hlo)
+    hlo_path = cell_path(arch, shape_name, multi_pod,
+                         overrides and "ovr" or "").with_suffix(".hlo.gz")
+    with gzip.open(hlo_path, "wt") as f:
+        f.write(hlo)
+    n_chips = 1
+    for a in mesh.axis_names:
+        n_chips *= mesh.shape[a]
+    mem_d = {
+        "argument_size_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_size_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_size_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_size_bytes":
+            getattr(mem, "generated_code_size_in_bytes", None),
+        "alias_size_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    peak = ((mem_d["argument_size_bytes"] or 0)
+            + (mem_d["output_size_bytes"] or 0)
+            + (mem_d["temp_size_bytes"] or 0)
+            - (mem_d["alias_size_bytes"] or 0))
+    flops = float(cost.get("flops", -1)) if cost else -1.0
+    bytes_acc = float(cost.get("bytes accessed", -1)) if cost else -1.0
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok", "meta": meta, "n_chips": n_chips,
+        "memory": mem_d, "peak_bytes_per_device": peak,
+        "xla_flops_per_device": flops, "xla_bytes_per_device": bytes_acc,
+        "walk": walk,
+        "flops_per_device": walk["flops"],
+        "hbm_bytes_per_device": walk["hbm_bytes"],
+        "collectives": walk["by_kind"],
+        "collective_link_bytes_per_device": walk["coll_link_bytes"],
+        "collectives_single_count": colls,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+    }
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool,
+              tag: str = "") -> pathlib.Path:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    suffix = f"__{tag}" if tag else ""
+    return RUNS / f"{arch}__{shape}__{mesh}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--overrides", default="",
+                    help="JSON dict of ModelConfig overrides (perf iter)")
+    args = ap.parse_args()
+    RUNS.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import list_archs
+        from repro.models.config import SHAPES
+        cells = [(a, s, mp)
+                 for a in list_archs() for s in SHAPES
+                 for mp in ((False, True) if args.both_meshes
+                            else (args.multi_pod,))]
+        failures = 0
+        for arch, shape, mp in cells:
+            out = cell_path(arch, shape, mp, args.tag)
+            if out.exists() and not args.force:
+                print(f"cached  {out.name}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape]
+            if mp:
+                cmd.append("--multi-pod")
+            if args.tag:
+                cmd += ["--tag", args.tag]
+            if args.overrides:
+                cmd += ["--overrides", args.overrides]
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=3600)
+            dt = time.time() - t0
+            if r.returncode != 0 or not out.exists():
+                failures += 1
+                err = (r.stderr or "")[-2000:]
+                out.write_text(json.dumps(
+                    {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if mp else "16x16",
+                     "status": "error", "stderr": err}, indent=1))
+                print(f"FAIL    {out.name} ({dt:.0f}s)")
+            else:
+                print(f"ok      {out.name} ({dt:.0f}s)")
+        return 1 if failures else 0
+
+    assert args.arch and args.shape, "--arch and --shape required"
+    overrides = json.loads(args.overrides) if args.overrides else None
+    try:
+        res = run_cell(args.arch, args.shape, args.multi_pod, overrides)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape,
+               "mesh": "2x16x16" if args.multi_pod else "16x16",
+               "status": "error", "traceback": traceback.format_exc()}
+    out = cell_path(args.arch, args.shape, args.multi_pod, args.tag)
+    out.write_text(json.dumps(res, indent=1))
+    status = res["status"]
+    print(f"{status}: {out}")
+    if status == "error":
+        print(res.get("traceback", res.get("reason", ""))[-3000:])
+    return 0 if status in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,185 @@
+"""PartitionSpec rules for every tree the launcher lowers.
+
+Policy (baseline; §Perf iterates on it):
+  * params     — Megatron TP over "model" (attention heads / ffn hidden /
+                 vocab), optional FSDP over "data" on the largest free dim.
+  * opt state  — ZeRO: moments take the param spec + "data" on a free dim.
+  * batch      — leading (batch) dim over ("pod","data") when divisible.
+  * KV caches  — batch over data axes; then KV-heads over "model" when
+                 divisible, else head_dim, else the cache-sequence dim.
+  * activations— residual stream constraint via shardctx (propagated
+                 elsewhere by GSPMD).
+
+Every dim is sharded only when evenly divisible — helpers degrade to
+replication instead of relying on uneven-shard padding.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.shardctx import batch_axes
+
+
+def _axsize(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+def _div(dim: int, mesh: Mesh, names) -> bool:
+    return dim % _axsize(mesh, names) == 0 and dim >= _axsize(mesh, names)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    M = "model"
+
+    def col():     # (.., D_in, D_out) shard output dim
+        return P(*([None] * (len(shape) - 1)), M) \
+            if _div(shape[-1], mesh, M) else P()
+
+    def row():     # (.., D_in, D_out) shard input dim
+        return P(*([None] * (len(shape) - 2)), M, None) \
+            if len(shape) >= 2 and _div(shape[-2], mesh, M) else P()
+
+    if "embed" in path or "lm_head" in path:
+        if _div(shape[0], mesh, M):
+            return P(M, None)                    # vocab-sharded
+        if _div(shape[1], mesh, M):
+            return P(None, M)
+        return P()
+    if any(k in path for k in ("wq", "wk", "wv", "up", "gate",
+                               "w_in", "w_gate_branch", "w_i", "w_r",
+                               "in_z", "in_x", "in_dt", "frontend_proj")):
+        return col()
+    if any(k in path for k in ("wo", "down", "out_proj", "w_out")):
+        return row()
+    if "conv_x" in path:                          # (width, di)
+        return col()
+    if ("conv" in path and "conv_B" not in path and "conv_C" not in path
+            and len(shape) == 2):                 # rglru conv (width, W)
+        return col()
+    if "out_norm" in path and _div(shape[-1], mesh, M):
+        return P(*([None] * (len(shape) - 1)), M)
+    if "lam" in path and _div(shape[-1], mesh, M):
+        return P(*([None] * (len(shape) - 1)), M)
+    return P()  # norms, routers, scalars, biases, pos_dec, in_B/in_C
+
+
+def _with_fsdp(spec: P, shape, mesh: Mesh) -> P:
+    """Add "data" sharding on the largest spec-free, divisible dim."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    cand = [(shape[i], i) for i in range(len(shape))
+            if parts[i] is None and _div(shape[i], mesh, "data")]
+    if not cand:
+        return spec
+    _, i = max(cand)
+    parts[i] = "data"
+    return P(*parts)
+
+
+def param_pspecs(param_tree, mesh: Mesh, fsdp: bool = False):
+    """Tree of PartitionSpecs matching param_tree (of arrays or SDS)."""
+    def one(path, leaf):
+        s = jax.tree_util.keystr(path)
+        spec = param_spec(s, leaf.shape, mesh)
+        if fsdp:
+            if "embed" in s or "lm_head" in s:
+                # never FSDP the embedding: a d_model shard puts a
+                # data-axis psum on every CE chunk, and a (model, data)
+                # vocab shard conflicts with the data-sharded batch dim of
+                # the chunked-CE logits (double-mapped axis -> gathers).
+                return spec
+            spec = _with_fsdp(spec, leaf.shape, mesh)
+        return spec
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def opt_pspecs(param_tree, mesh: Mesh, fsdp: bool = False):
+    """ZeRO: moments get the param spec plus a "data" dim."""
+    def one(path, leaf):
+        s = jax.tree_util.keystr(path)
+        spec = param_spec(s, leaf.shape, mesh)
+        return _with_fsdp(spec, leaf.shape, mesh)
+    mv = jax.tree_util.tree_map_with_path(one, param_tree)
+    return {"m": mv, "v": mv, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+
+def batch_pspecs(batch_tree, mesh: Mesh):
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        lead = ba if (ba and _div(leaf.shape[0], mesh, ba)) else \
+            ("data",) if _div(leaf.shape[0], mesh, "data") else None
+        return P(lead, *([None] * (leaf.ndim - 1)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_pspecs(cache_tree, mesh: Mesh, batch: int):
+    """Decode-cache rules; leaves are (n_cycles, B, ...) stacked or (B, ...)
+    (remainder layers), plus scalars/positions."""
+    ba = batch_axes(mesh)
+    bdim_shard = ba if (ba and batch % _axsize(mesh, ba) == 0) else \
+        (("data",) if batch % _axsize(mesh, "data") == 0 else None)
+
+    def one(path, leaf):
+        last = path[-1]
+        name = getattr(last, "key", str(last))
+        shp = leaf.shape
+        if leaf.ndim == 0 or name in ("positions", "pos", "enc_len"):
+            return P()
+        # find the batch dim: stacked caches have it at 1, rem at 0
+        bdim = 1 if (leaf.ndim >= 2 and shp[0] != batch
+                     and shp[1] == batch) else 0
+        parts = [None] * leaf.ndim
+        if shp[bdim] == batch and bdim_shard:
+            parts[bdim] = bdim_shard
+        if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+            # prefer KV-head sharding; else the cache-sequence dim (decode
+            # scores gather is small); hd-sharding LAST — GSPMD answers it
+            # by all-gathering the whole cache (measured 21.5 GB/step on
+            # granite decode_32k; §Perf iter 2)
+            C, K, hd = shp[-3], shp[-2], shp[-1]
+            if _div(K, mesh, "model"):
+                parts[-2] = "model"
+            elif _div(C, mesh, "model"):
+                parts[-3] = "model"
+            elif _div(hd, mesh, "model"):
+                parts[-1] = "model"
+        elif name == "state":                   # (.., B, nh, P, N)
+            if _div(shp[-3], mesh, "model"):
+                parts[-3] = "model"
+        elif name.startswith("conv") or name == "h":   # (.., W) channels
+            if _div(shp[-1], mesh, "model"):
+                parts[-1] = "model"
+        return P(*parts)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def residual_spec(mesh: Mesh, seq_shard: bool = False) -> P:
+    """(B, S, D) residual-stream constraint."""
+    ba = batch_axes(mesh)
+    if seq_shard:
+        return P(ba, "model", None)
+    return P(ba, None, None)

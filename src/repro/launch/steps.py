@@ -1,0 +1,179 @@
+"""Jittable train / prefill / decode steps + their sharding assignments.
+
+``lower_cell`` builds the AOT-lowered computation for one (arch x shape x
+mesh) dry-run cell entirely from ShapeDtypeStructs — nothing is allocated.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import input_specs
+from repro.distributed import shardctx
+from repro.launch import sharding as shr
+from repro.models import Model, greedy_sample
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.training import optimizer as opt
+
+
+def make_train_step(model: Model, ocfg: opt.AdamWConfig,
+                    microbatches: int = 1,
+                    grad_compression: bool = False):
+    """microbatches > 1 => gradient accumulation: the global batch is split
+    into k sequential microbatches (scanned), bounding activation memory at
+    fixed global batch size. Grads accumulate in f32 with the params'
+    sharding. grad_compression => int8 error-feedback quantization of the
+    grads before the DP reduction (opt_state carries the error buffers)."""
+    def grad_fn(params, mb):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, mb)
+
+    def train_step(params, opt_state, batch):
+        if grad_compression and "ef" not in opt_state:
+            raise ValueError("opt_state must carry 'ef' buffers; "
+                             "use init_opt_state(..., compression=True)")
+        if microbatches == 1:
+            (loss, mets), grads = grad_fn(params, batch)
+        else:
+            k = microbatches
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]),
+                batch)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0.0)), mbs)
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            loss = lsum / k
+            mets = {"ce": loss, "aux": jnp.float32(0.0)}
+        if grad_compression:
+            from repro.distributed.compression import compress_decompress
+            ef = opt_state.pop("ef")
+            grads, ef, cmets = compress_decompress(grads, ef)
+            opt_state = dict(opt_state)
+            mets = dict(mets, **cmets)
+        params, inner, omets = opt.update(
+            ocfg, grads, {k_: v for k_, v in opt_state.items()
+                          if k_ != "ef"}, params)
+        opt_state = dict(inner, ef=ef) if grad_compression else inner
+        mets = dict(mets, loss=loss, **omets)
+        return params, opt_state, mets
+    return train_step
+
+
+def init_opt_state(params, compression: bool = False):
+    state = opt.init(params)
+    if compression:
+        state = dict(state, ef=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    return state
+
+
+def make_prefill_step(model: Model, pad_to: int = 0):
+    def prefill_step(params, batch):
+        logits, cache = model.prefill(params, batch, pad_to=pad_to)
+        return greedy_sample(logits), cache
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        logits, cache = model.decode(params, cache, tokens)
+        return greedy_sample(logits)[:, None], cache
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering of one dry-run cell
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               fsdp: Optional[bool] = None,
+               seq_shard_resid: Optional[bool] = None,
+               donate: bool = True):
+    """Returns (lowered, meta) for the cell's step function."""
+    cfg = cfg.replace(vocab_pad_to=256)
+    model = Model(cfg)
+    big = cfg.param_counts()["total"] * 2 >= 8e9       # >=8 GB of bf16
+    fsdp = big if fsdp is None else fsdp
+    if seq_shard_resid is None:
+        # naive GSPMD sequence-parallelism constraint reshards inside the
+        # flash-attention loops (measured: 20k+ extra gathers) — keep the
+        # residual replicated over "model"; memory is bounded with
+        # gradient accumulation instead (see microbatch rule below).
+        seq_shard_resid = False
+
+    pspecs = shr.param_pspecs(model.param_specs(), mesh, fsdp=fsdp)
+    param_sh = shr.to_named(pspecs, mesh)
+    batch = input_specs(cfg, shape)
+    batch_sh = shr.to_named(shr.batch_pspecs(batch, mesh), mesh)
+    rules = dict(residual=shr.residual_spec(mesh, seq_shard_resid))
+
+    meta = {"arch": cfg.name, "shape": shape.name, "fsdp": fsdp,
+            "seq_shard_resid": seq_shard_resid,
+            "mesh": dict(zip(mesh.axis_names,
+                             (mesh.shape[a] for a in mesh.axis_names)))}
+
+    with shardctx.sharding_rules(mesh, **rules):
+        if shape.kind == "train":
+            ocfg = opt.AdamWConfig()
+            ospecs = jax.eval_shape(
+                lambda: opt.init(model.param_specs()))
+            osh_specs = {
+                "m": shr.opt_pspecs(model.param_specs(), mesh)["m"],
+                "v": shr.opt_pspecs(model.param_specs(), mesh)["v"],
+                "step": P(),
+            }
+            opt_sh = shr.to_named(osh_specs, mesh)
+            # microbatch rule: bound the per-chip f32 saved-residual stack
+            # (n_cycles x B_mb/dp x S x D x 4B). MoE under FSDP gets a
+            # larger budget — every extra microbatch re-gathers the expert
+            # weights (measured 360 GB/step at k=16 on mixtral; §Perf
+            # iter 2), so fewer/larger microbatches win there.
+            dp = 1
+            for a in shardctx.batch_axes(mesh):
+                dp *= mesh.shape[a]
+            B = shape.global_batch
+            resid = (4.0 * cfg.n_cycles * (B / dp)
+                     * shape.seq_len * cfg.d_model)
+            target = 8e9 if (fsdp and cfg.family == "moe") else 2e9
+            k = 1
+            while resid / k > target and k < max(B // dp, 1):
+                k *= 2
+            fn = make_train_step(model, ocfg, microbatches=k)
+            meta["microbatches"] = k
+            jfn = jax.jit(
+                fn,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1) if donate else ())
+            lowered = jfn.lower(model.param_specs(), ospecs, batch)
+        elif shape.kind == "prefill":
+            fn = make_prefill_step(model, pad_to=shape.seq_len)
+            jfn = jax.jit(fn, in_shardings=(param_sh, batch_sh))
+            lowered = jfn.lower(model.param_specs(), batch)
+        else:  # decode
+            cache = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_sh = shr.to_named(
+                shr.cache_pspecs(cache, mesh, shape.global_batch), mesh)
+            tok_sh = shr.to_named(
+                shr.batch_pspecs(batch, mesh), mesh)["tokens"]
+            fn = make_decode_step(model)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(param_sh, cache_sh, tok_sh),
+                out_shardings=(tok_sh, cache_sh),
+                donate_argnums=(1,) if donate else ())
+            lowered = jfn.lower(model.param_specs(), cache,
+                                batch["tokens"])
+    return lowered, meta

@@ -1,0 +1,44 @@
+"""Training launcher CLI (any zoo arch, smoke or reduced scale on CPU;
+the full configs lower via the dry-run on the production meshes).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 60 --ckpt runs/ckpt_demo
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_variant
+    from repro.models import Model
+    from repro.training.data import TokenStream
+    from repro.training.train_loop import TrainConfig, train
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    model = Model(cfg)
+    print(f"{cfg.name}: {cfg.param_counts()['total']/1e6:.1f}M params")
+    data = TokenStream(cfg.vocab, args.seq, args.batch, seed=0)
+    out = train(model, data, TrainConfig(
+        n_steps=args.steps, ckpt_dir=args.ckpt or None,
+        grad_compression=args.compress_grads,
+        microbatches=args.microbatches))
+    print(f"loss {out['first_loss']:.3f} -> {out['final_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .api import Model, greedy_sample
+from .config import BlockCfg, ModelConfig, SHAPES, ShapeSpec, smoke_shape
+
+__all__ = ["Model", "greedy_sample", "BlockCfg", "ModelConfig", "SHAPES",
+           "ShapeSpec", "smoke_shape"]

@@ -1,0 +1,63 @@
+"""Unified Model facade: one object per architecture config.
+
+Dispatches decoder-only vs encoder-decoder families and exposes the four
+entry points the launcher/serving layers lower:
+  init(key), loss(params, batch), prefill(params, batch), decode(params,
+  cache, tokens), init_cache(batch, ctx).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, model
+from .config import ModelConfig
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ---------------------------------------------------------
+    def init(self, key) -> Dict:
+        if self.cfg.is_encdec:
+            return encdec.init_params(self.cfg, key)
+        return model.init_params(self.cfg, key)
+
+    def param_specs(self) -> Dict:
+        """Abstract parameter tree (ShapeDtypeStructs; no allocation)."""
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch: Dict[str, Any]):
+        if self.cfg.is_encdec:
+            return encdec.loss_fn(params, self.cfg, batch)
+        return model.loss_fn(params, self.cfg, batch)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch: Dict[str, Any], pad_to: int = 0):
+        if self.cfg.is_encdec:
+            return encdec.prefill(params, self.cfg, batch["frames"],
+                                  batch["tokens"])
+        return model.prefill(params, self.cfg, batch["tokens"],
+                             batch.get("frontend_embeds"), pad_to=pad_to)
+
+    def decode(self, params, cache, tokens):
+        if self.cfg.is_encdec:
+            return encdec.decode_step(params, self.cfg, cache, tokens)
+        return model.decode_step(params, self.cfg, cache, tokens)
+
+    def init_cache(self, batch: int, ctx: int):
+        if self.cfg.is_encdec:
+            return encdec.init_cache(self.cfg, batch, ctx)
+        return model.init_cache(self.cfg, batch, ctx)
+
+    def cache_specs(self, batch: int, ctx: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, ctx))
+
+
+def greedy_sample(logits) -> jax.Array:
+    """Temperature-0 decoding (the paper's determinism contract, §4.2)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,432 @@
+"""Layer blocks: attention / RG-LRU / SSD mixers + dense|moe MLP.
+
+A block is (pre-norm -> mixer -> residual -> pre-norm -> mlp -> residual);
+mamba2-style ssd blocks have no separate MLP (mlp="none"). Every forward
+supports three modes:
+  train   — full-sequence causal, no cache
+  prefill — full-sequence causal, returns populated cache
+  decode  — single token, consumes + updates cache
+
+Caches are plain dict pytrees so they stack over scan cycles.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, flash_attention, repeat_kv
+from .config import BlockCfg, ModelConfig
+from .layers import apply_act, apply_norm, apply_rope, dense_init, mlp, \
+    mlp_params, norm_params
+from .moe import moe_layer, moe_layer_sharded, moe_params
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (width w)
+
+def conv_params(key, width: int, channels: int, dtype):
+    return {"w": dense_init(key, (width, channels), scale=0.5, dtype=dtype)}
+
+
+def causal_conv(x, p, width: int):
+    """x: (B, S, C) full-sequence causal depthwise conv."""
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = sum(pad[:, i:i + S] * p["w"][i] for i in range(width))
+    return out
+
+
+def conv_step(x_t, state, p, width: int):
+    """x_t: (B, C) one step; state: (B, width-1, C) past inputs."""
+    full = jnp.concatenate([state, x_t[:, None]], axis=1)   # (B, w, C)
+    out = jnp.einsum("bwc,wc->bc", full, p["w"])
+    return out, full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+
+def attn_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (D, K * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (D, K * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qk_norm(x, scale, eps):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def attn_forward(x, p: Params, cfg: ModelConfig, blk: BlockCfg, mode: str,
+                 cache: Optional[Params], pos,
+                 pad_to: int = 0) -> Tuple[jax.Array, Params]:
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, K, hd)
+    v = (x @ p["wv"]).reshape(B, S, K, hd)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if mode == "decode":
+        q = apply_rope(q, jnp.full((B, 1), pos), blk.rope_theta)
+        k = apply_rope(k, jnp.full((B, 1), pos), blk.rope_theta)
+        C = cache["k"].shape[1]
+        slot = pos % C
+        kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(
+            cache["positions"], pos[None].astype(jnp.int32), (slot,))
+        o = decode_attention(q, kc, vc, cpos, pos, window=blk.window)
+        new_cache = {"k": kc, "v": vc, "positions": cpos}
+    else:
+        positions = jnp.arange(S)[None, :]
+        q = apply_rope(q, positions, blk.rope_theta)
+        k = apply_rope(k, positions, blk.rope_theta)
+        o = flash_attention(
+            q, repeat_kv(k, H // K), repeat_kv(v, H // K),
+            causal=True, window=blk.window,
+            block_q=min(cfg.attn_chunk, S), block_kv=min(cfg.attn_chunk, S),
+            skip_masked_blocks=getattr(cfg, "_skip_blocks", False))
+        if mode == "prefill":
+            C = blk.cache_len(max(pad_to, S))
+            if S <= C:
+                padw = ((0, 0), (0, C - S), (0, 0), (0, 0))
+                new_cache = {
+                    "k": jnp.pad(k, padw),
+                    "v": jnp.pad(v, padw),
+                    "positions": jnp.concatenate(
+                        [jnp.arange(S, dtype=jnp.int32),
+                         jnp.full((C - S,), -1, jnp.int32)]),
+                }
+            else:
+                # windowed: slot j holds the latest pos p with p % C == j
+                j = jnp.arange(C)
+                p_j = (S - 1) - ((S - 1 - j) % C)
+                new_cache = {
+                    "k": jnp.take(k, p_j, axis=1),
+                    "v": jnp.take(v, p_j, axis=1),
+                    "positions": p_j.astype(jnp.int32),
+                }
+        else:
+            new_cache = cache
+    out = o.reshape(B, S, H * hd) @ p["wo"]
+    return out, new_cache
+
+
+def attn_cache_spec(cfg: ModelConfig, blk: BlockCfg, B: int, ctx: int):
+    C = blk.cache_len(ctx)
+    return {
+        "k": jnp.zeros((B, C, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": jnp.zeros((B, C, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "positions": jnp.full((C,), -1, jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (griffin / recurrentgemma) recurrent block
+
+_LRU_C = 8.0
+
+
+def rglru_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    dtype = dtype or cfg.dtype
+    D, W = cfg.d_model, cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (D, W), dtype=dtype),
+        "w_gate_branch": dense_init(ks[1], (D, W), dtype=dtype),
+        "w_out": dense_init(ks[2], (W, D), dtype=dtype),
+        "w_i": dense_init(ks[3], (W, W), dtype=dtype),
+        "w_r": dense_init(ks[4], (W, W), dtype=dtype),
+        "lam": jax.random.uniform(ks[5], (W,), jnp.float32, 0.9, 0.999),
+        "conv": conv_params(ks[6], cfg.conv_width, W, dtype),
+    }
+
+
+def _lru_gates(u, p):
+    uf = u.astype(jnp.float32)
+    i_t = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    r_t = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    log_a = _LRU_C * jax.nn.log_sigmoid(
+        jnp.log(p["lam"] / (1 - p["lam"]))) * r_t     # (..., W) in (-inf, 0)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_t * uf)
+    return a, b
+
+
+def rglru_forward(x, p: Params, cfg: ModelConfig, blk: BlockCfg, mode: str,
+                  cache: Optional[Params], pos,
+                  pad_to: int = 0) -> Tuple[jax.Array, Params]:
+    B, S, D = x.shape
+    u_in = x @ p["w_in"]
+    gate = apply_act(x @ p["w_gate_branch"], "gelu")
+    if mode == "decode":
+        u, conv_state = conv_step(u_in[:, 0], cache["conv"], p["conv"],
+                                  cfg.conv_width)
+        a, b = _lru_gates(u, p)
+        h = a * cache["h"] + b
+        y = h[:, None].astype(x.dtype)
+        new_cache = {"h": h, "conv": conv_state}
+    else:
+        u = causal_conv(u_in, p["conv"], cfg.conv_width)
+        a, b = _lru_gates(u, p)
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = h.astype(x.dtype)
+        if mode == "prefill":
+            new_cache = {"h": h[:, -1],
+                         "conv": u_in[:, -(cfg.conv_width - 1):]}
+        else:
+            new_cache = cache
+    return (y * gate) @ p["w_out"], new_cache
+
+
+def rglru_cache_spec(cfg: ModelConfig, blk: BlockCfg, B: int, ctx: int):
+    W = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((B, W), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, W), cfg.dtype)}
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2) block
+
+def ssd_params(key, cfg: ModelConfig, dtype=None) -> Params:
+    """Projections are stored per logical segment (z/x/B/C/dt) rather than
+    as one fused in_proj so each can be TP-sharded on its own output dim
+    without splits crossing shard boundaries."""
+    dtype = dtype or cfg.dtype
+    D, di, N, G, nh = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                       cfg.ssm_groups, cfg.ssm_heads)
+    ks = jax.random.split(key, 9)
+    return {
+        "in_z": dense_init(ks[0], (D, di), dtype=dtype),
+        "in_x": dense_init(ks[1], (D, di), dtype=dtype),
+        "in_B": dense_init(ks[2], (D, G * N), dtype=dtype),
+        "in_C": dense_init(ks[3], (D, G * N), dtype=dtype),
+        "in_dt": dense_init(ks[4], (D, nh), dtype=dtype),
+        "conv_x": conv_params(ks[5], cfg.conv_width, di, dtype),
+        "conv_B": conv_params(ks[6], cfg.conv_width, G * N, dtype),
+        "conv_C": conv_params(ks[7], cfg.conv_width, G * N, dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[8], (di, D), dtype=dtype),
+    }
+
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) cumulative sums over segments k<q."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    # L[q, k] = exp(sum_{j=k+1..q} dA_j) = exp(cs_q - cs_k), k <= q
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk: int, init_state):
+    """Chunked SSD scan (Mamba-2 'state space duality' algorithm).
+
+    xh: (B,S,nh,P); Bm/Cm: (B,S,G,N) (G broadcast over heads); dt: (B,S,nh);
+    A: (nh,) negative. Returns (y (B,S,nh,P), final_state (B,nh,P,N)).
+    """
+    Bsz, S, nh, P = xh.shape
+    G = Bm.shape[2]
+    N = Bm.shape[3]
+    rep = nh // G
+    S_orig = S
+    if S % chunk:
+        # zero-pad: dt=0 makes padded steps exact no-ops (decay 1, input 0)
+        pad = chunk - S % chunk
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // chunk
+    xc = xh.reshape(Bsz, nc, chunk, nh, P)
+    Bc = jnp.repeat(Bm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+    Cc = jnp.repeat(Cm.reshape(Bsz, nc, chunk, G, N), rep, axis=3)
+    dtc = dt.reshape(Bsz, nc, chunk, nh)
+    dAc = dtc * A[None, None, None, :]                      # (B,nc,Q,nh)
+
+    def chunk_body(state, inp):
+        xq, Bq, Cq, dtq, dAq = inp                          # per-chunk
+        dAq_t = jnp.moveaxis(dAq, -1, 1)                    # (B,nh,Q)
+        cum = jnp.cumsum(dAq_t, axis=-1)                    # (B,nh,Q)
+        # intra-chunk: L[q,k] = exp(cum_q - cum_k + dA_k)?  standard segsum
+        L = jnp.exp(_segsum(dAq_t))                         # (B,nh,Q,Q)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", Cq, Bq,
+                            preferred_element_type=jnp.float32)
+        M = scores * L * jnp.moveaxis(dtq, -1, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", M.astype(xq.dtype), xq,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(cum)                             # (B,nh,Q)
+        y_inter = jnp.einsum("bqhn,bhpn->bqhp",
+                             Cq * jnp.moveaxis(decay_in, 1, -1)[..., None],
+                             state, preferred_element_type=jnp.float32)
+        # chunk's new state
+        decay_out = jnp.exp(cum[..., -1:] - cum)            # (B,nh,Q)
+        contrib = dtq * jnp.moveaxis(decay_out, 1, -1)      # (B,Q,nh)
+        st = jnp.einsum("bqhn,bqhp,bqh->bhpn", Bq, xq, contrib,
+                        preferred_element_type=jnp.float32)
+        chunk_decay = jnp.exp(cum[..., -1])                 # (B,nh)
+        state = state * chunk_decay[..., None, None] + st
+        return state, (y_intra + y_inter).astype(xq.dtype)
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(Bc, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(dAc, 1, 0))
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_body), init_state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, nh, P)[:, :S_orig]
+    return y, final_state
+
+
+def ssd_forward(x, p: Params, cfg: ModelConfig, blk: BlockCfg, mode: str,
+                cache: Optional[Params], pos,
+                pad_to: int = 0) -> Tuple[jax.Array, Params]:
+    B, S, D = x.shape
+    di, N, G, nh, P = (cfg.d_inner, cfg.ssm_state, cfg.ssm_groups,
+                       cfg.ssm_heads, cfg.ssm_head_dim)
+    z = x @ p["in_z"]
+    xr = x @ p["in_x"]
+    Br = x @ p["in_B"]
+    Cr = x @ p["in_C"]
+    dt_raw = x @ p["in_dt"]
+    A = -jnp.exp(p["A_log"])                                 # (nh,)
+
+    if mode == "decode":
+        xt, cs_x = conv_step(xr[:, 0], cache["conv_x"], p["conv_x"],
+                             cfg.conv_width)
+        Bt, cs_B = conv_step(Br[:, 0], cache["conv_B"], p["conv_B"],
+                             cfg.conv_width)
+        Ct, cs_C = conv_step(Cr[:, 0], cache["conv_C"], p["conv_C"],
+                             cfg.conv_width)
+        xh = apply_act(xt, "silu").reshape(B, nh, P)
+        Bm = jnp.repeat(apply_act(Bt, "silu").reshape(B, G, N).astype(
+            jnp.float32), nh // G, axis=1)
+        Cm = jnp.repeat(apply_act(Ct, "silu").reshape(B, G, N).astype(
+            jnp.float32), nh // G, axis=1)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+        dA = jnp.exp(dt * A)                                 # (B,nh)
+        state = cache["state"] * dA[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn", xh.astype(jnp.float32), Bm, dt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, Cm)
+        y = y + p["D_skip"][None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"state": state, "conv_x": cs_x, "conv_B": cs_B,
+                     "conv_C": cs_C}
+    else:
+        xh = apply_act(causal_conv(xr, p["conv_x"], cfg.conv_width), "silu")
+        Bm = apply_act(causal_conv(Br, p["conv_B"], cfg.conv_width), "silu")
+        Cm = apply_act(causal_conv(Cr, p["conv_C"], cfg.conv_width), "silu")
+        xh = xh.reshape(B, S, nh, P)
+        Bm = Bm.reshape(B, S, G, N).astype(jnp.float32)
+        Cm = Cm.reshape(B, S, G, N).astype(jnp.float32)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        init = jnp.zeros((B, nh, P, N), jnp.float32)
+        y, final_state = _ssd_chunked(xh, Bm, Cm, dt, A,
+                                      min(cfg.ssm_chunk, S), init)
+        y = y + p["D_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, S, di).astype(x.dtype)
+        if mode == "prefill":
+            new_cache = {"state": final_state,
+                         "conv_x": xr[:, -(cfg.conv_width - 1):],
+                         "conv_B": Br[:, -(cfg.conv_width - 1):],
+                         "conv_C": Cr[:, -(cfg.conv_width - 1):]}
+        else:
+            new_cache = cache
+    # gated RMSNorm then out projection (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + cfg.norm_eps) \
+        * (1.0 + p["out_norm"].astype(jnp.float32))
+    return yf.astype(x.dtype) @ p["out_proj"], new_cache
+
+
+def ssd_cache_spec(cfg: ModelConfig, blk: BlockCfg, B: int, ctx: int):
+    GN = cfg.ssm_groups * cfg.ssm_state
+    w = cfg.conv_width - 1
+    return {
+        "state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32),
+        "conv_x": jnp.zeros((B, w, cfg.d_inner), cfg.dtype),
+        "conv_B": jnp.zeros((B, w, GN), cfg.dtype),
+        "conv_C": jnp.zeros((B, w, GN), cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block = norm -> mixer -> residual [-> norm -> mlp -> residual]
+
+_MIXERS = {"attn": (attn_params, attn_forward, attn_cache_spec),
+           "rglru": (rglru_params, rglru_forward, rglru_cache_spec),
+           "ssd": (ssd_params, ssd_forward, ssd_cache_spec)}
+
+
+def block_params(key, cfg: ModelConfig, blk: BlockCfg) -> Params:
+    ks = jax.random.split(key, 4)
+    mixer_init = _MIXERS[blk.mixer][0]
+    p = {"norm1": norm_params(ks[0], cfg.d_model, cfg.norm, cfg.dtype),
+         "mixer": mixer_init(ks[1], cfg)}
+    if blk.mlp != "none":
+        p["norm2"] = norm_params(ks[2], cfg.d_model, cfg.norm, cfg.dtype)
+        if blk.mlp == "moe":
+            p["mlp"] = moe_params(ks[3], cfg.d_model, cfg.d_ff,
+                                  cfg.n_experts, cfg.glu, cfg.dtype)
+        else:
+            p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.glu,
+                                  cfg.dtype)
+    return p
+
+
+def block_forward(x, p: Params, cfg: ModelConfig, blk: BlockCfg, mode: str,
+                  cache: Optional[Params], pos, pad_to: int = 0):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer_fwd = _MIXERS[blk.mixer][1]
+    h = apply_norm(x, p["norm1"], cfg.norm, cfg.norm_eps)
+    mix, new_cache = mixer_fwd(h, p["mixer"], cfg, blk, mode, cache, pos,
+                               pad_to)
+    x = x + mix
+    aux = jnp.float32(0.0)
+    if blk.mlp != "none":
+        h2 = apply_norm(x, p["norm2"], cfg.norm, cfg.norm_eps)
+        if blk.mlp == "moe":
+            out, aux = moe_layer_sharded(
+                h2, p["mlp"], top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor,
+                act=cfg.act, glu=cfg.glu, no_drop=(mode == "decode"))
+        else:
+            out = mlp(h2, p["mlp"], cfg.act, cfg.glu)
+        x = x + out
+    return x, new_cache, aux
+
+
+def block_cache_spec(cfg: ModelConfig, blk: BlockCfg, B: int, ctx: int):
+    return _MIXERS[blk.mixer][2](cfg, blk, B, ctx)

@@ -1,0 +1,249 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend is a STUB per the brief: ``input_specs()`` provides
+precomputed mel-frame features (B, S_enc, frontend_dim) which a single
+linear projection (standing in for whisper's conv stack) maps to d_model.
+The encoder is bidirectional; the decoder has causal self-attention +
+cross-attention with a whisper-design max decoder length (448).
+
+Shape mapping for the assigned LM shapes (noted in DESIGN.md): ``seq_len``
+parameterizes the ENCODER frame count; the decoder runs at
+min(dec_max_len, seq_len). Decode steps carry a self-attn KV cache plus a
+precomputed cross-attention KV over the encoded frames.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import decode_attention, flash_attention, repeat_kv
+from .config import ModelConfig
+from .layers import apply_norm, chunked_ce_loss, dense_init, mlp, \
+    mlp_params, norm_params, sinusoidal_pos
+
+Params = Dict[str, Any]
+
+
+def _masked_logits(h_last, params, cfg):
+    logits = h_last.astype(jnp.float32) @ params["embed"].T.astype(
+        jnp.float32)
+    if cfg.padded_vocab > cfg.vocab:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab)[None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits
+
+
+def _attn_p(key, cfg, dtype):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (D, H * hd), dtype=dtype),
+            "wk": dense_init(ks[1], (D, K * hd), dtype=dtype),
+            "wv": dense_init(ks[2], (D, K * hd), dtype=dtype),
+            "wo": dense_init(ks[3], (H * hd, D), dtype=dtype)}
+
+
+def _enc_layer_p(key, cfg):
+    ks = jax.random.split(key, 4)
+    return {"norm1": norm_params(ks[0], cfg.d_model, cfg.norm, cfg.dtype),
+            "attn": _attn_p(ks[1], cfg, cfg.dtype),
+            "norm2": norm_params(ks[2], cfg.d_model, cfg.norm, cfg.dtype),
+            "mlp": mlp_params(ks[3], cfg.d_model, cfg.d_ff, cfg.glu,
+                              cfg.dtype)}
+
+
+def _dec_layer_p(key, cfg):
+    ks = jax.random.split(key, 6)
+    p = _enc_layer_p(key, cfg)
+    p["norm_x"] = norm_params(ks[4], cfg.d_model, cfg.norm, cfg.dtype)
+    p["xattn"] = _attn_p(ks[5], cfg, cfg.dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "frontend_proj": dense_init(ks[2], (cfg.frontend_dim, cfg.d_model),
+                                    dtype=cfg.dtype),
+        "embed": dense_init(ks[3], (cfg.padded_vocab, cfg.d_model),
+                            scale=0.02, dtype=cfg.dtype),
+        "pos_dec": dense_init(ks[4], (cfg.dec_max_len, cfg.d_model),
+                              scale=0.02, dtype=cfg.dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_p(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_p(k, cfg))(dec_keys),
+        "enc_norm": norm_params(ks[5], cfg.d_model, cfg.norm, cfg.dtype),
+        "dec_norm": norm_params(ks[6], cfg.d_model, cfg.norm, cfg.dtype),
+    }
+
+
+def _mha(x_q, x_kv, p, cfg, *, causal):
+    B, Sq, D = x_q.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x_q @ p["wq"]).reshape(B, Sq, H, hd)
+    k = (x_kv @ p["wk"]).reshape(B, x_kv.shape[1], K, hd)
+    v = (x_kv @ p["wv"]).reshape(B, x_kv.shape[1], K, hd)
+    o = flash_attention(q, repeat_kv(k, H // K), repeat_kv(v, H // K),
+                        causal=causal,
+                        block_q=min(cfg.attn_chunk, Sq),
+                        block_kv=min(cfg.attn_chunk, x_kv.shape[1]))
+    return o.reshape(B, Sq, H * hd) @ p["wo"]
+
+
+def encode(params: Params, cfg: ModelConfig, frames) -> jax.Array:
+    """frames: (B, S_enc, frontend_dim) -> (B, S_enc, D)."""
+    x = frames.astype(cfg.dtype) @ params["frontend_proj"]
+    x = x + sinusoidal_pos(x.shape[1], cfg.d_model, cfg.dtype)[None]
+
+    def body(h, lp):
+        s = apply_norm(h, lp["norm1"], cfg.norm, cfg.norm_eps)
+        h = h + _mha(s, s, lp["attn"], cfg, causal=False)
+        m = mlp(apply_norm(h, lp["norm2"], cfg.norm, cfg.norm_eps),
+                lp["mlp"], cfg.act, cfg.glu)
+        return h + m, None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
+
+
+def _dec_body_train(cfg, enc_out):
+    def body(h, lp):
+        s = apply_norm(h, lp["norm1"], cfg.norm, cfg.norm_eps)
+        h = h + _mha(s, s, lp["attn"], cfg, causal=True)
+        c = apply_norm(h, lp["norm_x"], cfg.norm, cfg.norm_eps)
+        h = h + _mha(c, enc_out, lp["xattn"], cfg, causal=False)
+        m = mlp(apply_norm(h, lp["norm2"], cfg.norm, cfg.norm_eps),
+                lp["mlp"], cfg.act, cfg.glu)
+        return h + m, None
+    return body
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict):
+    """batch: frames (B,S_enc,Fd), tokens (B,S_dec), labels (B,S_dec)."""
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        + params["pos_dec"][None, :tokens.shape[1]]
+    body = _dec_body_train(cfg, enc_out)
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = apply_norm(x, params["dec_norm"], cfg.norm, cfg.norm_eps)
+    ce = chunked_ce_loss(x, params["embed"], batch["labels"],
+                         batch.get("loss_mask"), cfg.loss_chunk,
+                         valid_vocab=cfg.vocab)
+    return ce, {"ce": ce, "aux": jnp.float32(0.0)}
+
+
+# ---------------------------------------------------------------------------
+# serving path
+
+def init_cache(cfg: ModelConfig, batch: int, enc_len: int) -> Params:
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    C = cfg.dec_max_len
+    return {
+        "pos": jnp.int32(0),
+        "self_k": jnp.zeros((L, batch, C, K, hd), cfg.dtype),
+        "self_v": jnp.zeros((L, batch, C, K, hd), cfg.dtype),
+        "positions": jnp.full((C,), -1, jnp.int32),
+        "cross_k": jnp.zeros((L, batch, enc_len, K, hd), cfg.dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, K, hd), cfg.dtype),
+        "enc_len": jnp.int32(enc_len),
+    }
+
+
+def prefill(params: Params, cfg: ModelConfig, frames,
+            tokens) -> Tuple[jax.Array, Params]:
+    """Encode frames, precompute cross KV, run decoder prefix (B, S0)."""
+    B = frames.shape[0]
+    enc_out = encode(params, cfg, frames)
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def cross_kv(lp):
+        k = (enc_out @ lp["xattn"]["wk"]).reshape(B, -1, K, hd)
+        v = (enc_out @ lp["xattn"]["wv"]).reshape(B, -1, K, hd)
+        return k, v
+
+    ck, cv = jax.vmap(cross_kv)(params["dec"])
+    cache = init_cache(cfg, B, enc_out.shape[1])
+    cache["cross_k"], cache["cross_v"] = ck, cv
+
+    # run the decoder prefix through decode steps' math in one pass
+    S0 = tokens.shape[1]
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        + params["pos_dec"][None, :S0]
+
+    def body(carry, xs):
+        h = carry
+        lp, = xs
+        s = apply_norm(h, lp["norm1"], cfg.norm, cfg.norm_eps)
+        q = (s @ lp["attn"]["wq"]).reshape(B, S0, cfg.n_heads, hd)
+        k = (s @ lp["attn"]["wk"]).reshape(B, S0, K, hd)
+        v = (s @ lp["attn"]["wv"]).reshape(B, S0, K, hd)
+        o = flash_attention(q, repeat_kv(k, cfg.n_heads // K),
+                            repeat_kv(v, cfg.n_heads // K), causal=True,
+                            block_q=S0, block_kv=S0)
+        h = h + o.reshape(B, S0, -1) @ lp["attn"]["wo"]
+        c = apply_norm(h, lp["norm_x"], cfg.norm, cfg.norm_eps)
+        h = h + _mha(c, enc_out, lp["xattn"], cfg, causal=False)
+        m = mlp(apply_norm(h, lp["norm2"], cfg.norm, cfg.norm_eps),
+                lp["mlp"], cfg.act, cfg.glu)
+        padw = ((0, 0), (0, cfg.dec_max_len - S0), (0, 0), (0, 0))
+        return h + m, (jnp.pad(k, padw), jnp.pad(v, padw))
+
+    x, (sk, sv) = jax.lax.scan(body, x, (params["dec"],))
+    cache["self_k"], cache["self_v"] = sk, sv
+    cache["positions"] = jnp.concatenate(
+        [jnp.arange(S0, dtype=jnp.int32),
+         jnp.full((cfg.dec_max_len - S0,), -1, jnp.int32)])
+    cache["pos"] = jnp.int32(S0)
+    x = apply_norm(x, params["dec_norm"], cfg.norm, cfg.norm_eps)
+    logits = _masked_logits(x[:, -1], params, cfg)
+    return logits, cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens) -> Tuple[jax.Array, Params]:
+    """tokens: (B, 1) decoder token. Returns (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    K, hd, H = cfg.n_kv_heads, cfg.hd, cfg.n_heads
+    dec_pos = jnp.clip(pos, 0, cfg.dec_max_len - 1)
+    x = jnp.take(params["embed"], tokens, axis=0) \
+        + jax.lax.dynamic_slice_in_dim(params["pos_dec"], dec_pos, 1)[None]
+    C = cache["self_k"].shape[2]
+    slot = pos % C
+    cpos = jax.lax.dynamic_update_slice(
+        cache["positions"], pos[None].astype(jnp.int32), (slot,))
+    enc_positions = jnp.arange(cache["cross_k"].shape[2], dtype=jnp.int32)
+
+    def body(carry, xs):
+        h = carry
+        lp, skc, svc, ckc, cvc = xs
+        s = apply_norm(h, lp["norm1"], cfg.norm, cfg.norm_eps)
+        q = (s @ lp["attn"]["wq"]).reshape(B, 1, H, hd)
+        k = (s @ lp["attn"]["wk"]).reshape(B, 1, K, hd)
+        v = (s @ lp["attn"]["wv"]).reshape(B, 1, K, hd)
+        skc = jax.lax.dynamic_update_slice(skc, k, (0, slot, 0, 0))
+        svc = jax.lax.dynamic_update_slice(svc, v, (0, slot, 0, 0))
+        o = decode_attention(q, skc, svc, cpos, pos)
+        h = h + o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+        c = apply_norm(h, lp["norm_x"], cfg.norm, cfg.norm_eps)
+        qx = (c @ lp["xattn"]["wq"]).reshape(B, 1, H, hd)
+        ox = decode_attention(qx, ckc, cvc, enc_positions,
+                              cache["cross_k"].shape[2])
+        h = h + ox.reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        m = mlp(apply_norm(h, lp["norm2"], cfg.norm, cfg.norm_eps),
+                lp["mlp"], cfg.act, cfg.glu)
+        return h + m, (skc, svc)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache.update(self_k=sk, self_v=sv, positions=cpos, pos=pos + 1)
+    x = apply_norm(x, params["dec_norm"], cfg.norm, cfg.norm_eps)
+    logits = _masked_logits(x[:, 0], params, cfg)
+    return logits, new_cache

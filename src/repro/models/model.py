@@ -1,0 +1,215 @@
+"""Unified decoder-only model over repeating block patterns.
+
+The layer stack is ``n_cycles`` repetitions of ``cfg.pattern`` (scanned, with
+per-cycle stacked parameters — one traced layer body per *slot* regardless of
+depth, which keeps 62-layer lowering cheap) plus ``n_rem`` unrolled remainder
+layers. Hosts every decoder-only architecture in the pool: dense GQA
+(granite/qwen3/phi3), 5:1 local:global (gemma3), MoE (mixtral/granite-moe),
+SSD (mamba2), RG-LRU hybrid (recurrentgemma) and the VLM variant (phi3-vision,
+patch embeddings prepended via a stub projection).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardctx import constrain
+
+from .blocks import block_cache_spec, block_forward, block_params
+from .config import ModelConfig
+from .layers import apply_norm, chunked_ce_loss, dense_init, embed_lookup, \
+    norm_params
+
+Params = Dict[str, Any]
+
+_ONE_HOT_VOCAB_MIN = 8192  # above this, lookup via chunked one-hot matmul
+
+
+def _embed(tokens, table, scale: float):
+    if table.shape[0] >= _ONE_HOT_VOCAB_MIN:
+        x = embed_lookup(tokens, table)
+    else:
+        x = jnp.take(table, tokens, axis=0)
+    return x * jnp.asarray(scale, x.dtype)
+
+
+def _unembed_table(params: Params, cfg: ModelConfig):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def _logits(h_last, params: Params, cfg: ModelConfig):
+    """(B, D) -> (B, V) f32 with padded-vocab columns masked."""
+    table = _unembed_table(params, cfg)
+    logits = h_last.astype(jnp.float32) @ table.T.astype(jnp.float32)
+    if cfg.padded_vocab > cfg.vocab:
+        logits = jnp.where(jnp.arange(cfg.padded_vocab)[None, :] < cfg.vocab,
+                           logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    assert not cfg.is_encdec, "use encdec.init_params"
+    ks = jax.random.split(key, 8)
+    params: Params = {
+        "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model),
+                            scale=0.02, dtype=cfg.dtype),
+        "final_norm": norm_params(ks[1], cfg.d_model, cfg.norm, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.padded_vocab,
+                                              cfg.d_model),
+                                       scale=0.02, dtype=cfg.dtype)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(
+            ks[3], (cfg.frontend_dim, cfg.d_model), dtype=cfg.dtype)
+    for s, blk in enumerate(cfg.pattern):
+        if cfg.n_cycles > 0:
+            keys = jax.random.split(jax.random.fold_in(ks[4], s),
+                                    cfg.n_cycles)
+            params[f"slot{s}"] = jax.vmap(
+                lambda k, _blk=blk: block_params(k, cfg, _blk))(keys)
+    for r in range(cfg.n_rem):
+        params[f"rem{r}"] = block_params(
+            jax.random.fold_in(ks[5], r), cfg, cfg.pattern[r])
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, ctx: int) -> Params:
+    cache: Params = {"pos": jnp.int32(0)}
+    for s, blk in enumerate(cfg.pattern):
+        if cfg.n_cycles > 0:
+            one = block_cache_spec(cfg, blk, batch, ctx)
+            cache[f"slot{s}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.n_cycles,) + a.shape).copy(), one)
+    for r in range(cfg.n_rem):
+        cache[f"rem{r}"] = block_cache_spec(cfg, cfg.pattern[r], batch, ctx)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+
+def _run_layers(params: Params, cfg: ModelConfig, x, mode: str,
+                cache: Optional[Params], pos, pad_to: int = 0):
+    period = len(cfg.pattern)
+    aux0 = jnp.float32(0.0)
+    new_cache: Params = None if mode == "train" else {}
+
+    if cfg.n_cycles > 0:
+        slot_params = tuple(params[f"slot{s}"] for s in range(period))
+
+        if mode in ("train", "prefill"):
+            def body(carry, xs):
+                h, aux = carry
+                h = constrain(h, "residual")
+                outs = []
+                for s, blk in enumerate(cfg.pattern):
+                    h, nc, a = block_forward(h, xs[s], cfg, blk, mode,
+                                             None, pos, pad_to)
+                    outs.append(nc)
+                    aux = aux + a
+                ys = tuple(outs) if mode == "prefill" else None
+                return (h, aux), ys
+
+            body = jax.checkpoint(body) if cfg.remat else body
+            (x, aux0), ys = jax.lax.scan(body, (x, aux0), slot_params)
+            if mode == "prefill":
+                for s in range(period):
+                    new_cache[f"slot{s}"] = ys[s]
+        else:  # decode
+            slot_caches = tuple(cache[f"slot{s}"] for s in range(period))
+
+            def body(carry, xs):
+                h, aux = carry
+                ps, cs = xs
+                outs = []
+                for s, blk in enumerate(cfg.pattern):
+                    h, nc, a = block_forward(h, ps[s], cfg, blk, "decode",
+                                             cs[s], pos)
+                    outs.append(nc)
+                    aux = aux + a
+                return (h, aux), tuple(outs)
+
+            (x, aux0), new_slot_caches = jax.lax.scan(
+                body, (x, aux0), (slot_params, slot_caches))
+            for s in range(period):
+                new_cache[f"slot{s}"] = new_slot_caches[s]
+
+    for r in range(cfg.n_rem):
+        blk = cfg.pattern[r]
+        c = cache.get(f"rem{r}") if mode == "decode" else None
+        x, nc, a = block_forward(x, params[f"rem{r}"], cfg, blk, mode, c,
+                                 pos, pad_to)
+        aux0 = aux0 + a
+        if new_cache is not None:
+            new_cache[f"rem{r}"] = nc
+    return x, new_cache, aux0
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, *, mode: str,
+            cache: Optional[Params] = None, frontend_embeds=None,
+            pad_to: int = 0):
+    """tokens: (B, S) int32. Returns (hidden (B,S',D), new_cache, aux)."""
+    pos = cache["pos"] if mode == "decode" else jnp.int32(0)
+    x = _embed(tokens, params["embed"], cfg.embed_scale)
+    if cfg.frontend != "none" and mode != "decode" \
+            and frontend_embeds is not None:
+        fe = frontend_embeds.astype(cfg.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)
+    x, new_cache, aux = _run_layers(params, cfg, x, mode, cache, pos, pad_to)
+    x = apply_norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict):
+    """batch: tokens (B,S), labels (B,S), optional loss_mask,
+    frontend_embeds (B,F,frontend_dim)."""
+    h, _, aux = forward(params, cfg, batch["tokens"], mode="train",
+                        frontend_embeds=batch.get("frontend_embeds"))
+    n_front = 0
+    if cfg.frontend != "none" and "frontend_embeds" in batch:
+        n_front = batch["frontend_embeds"].shape[1]
+        h = h[:, n_front:]
+    table = _unembed_table(params, cfg)
+    ce = chunked_ce_loss(h, table, batch["labels"],
+                         batch.get("loss_mask"), cfg.loss_chunk,
+                         valid_vocab=cfg.vocab)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens, frontend_embeds=None,
+            pad_to: int = 0) -> Tuple[jax.Array, Params]:
+    """pad_to: total context the caches should be sized for (>= prompt)."""
+    ctx = _ctx_len(cfg, tokens, frontend_embeds)
+    h, cache, _ = forward(params, cfg, tokens, mode="prefill",
+                          frontend_embeds=frontend_embeds,
+                          pad_to=max(pad_to, ctx))
+    cache["pos"] = jnp.int32(ctx)
+    logits = _logits(h[:, -1], params, cfg)
+    return logits, cache
+
+
+def _ctx_len(cfg, tokens, frontend_embeds):
+    n = tokens.shape[1]
+    if cfg.frontend != "none" and frontend_embeds is not None:
+        n += frontend_embeds.shape[1]
+    return n
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens) -> Tuple[jax.Array, Params]:
+    """tokens: (B, 1). Returns (logits (B, V) f32, new cache)."""
+    h, new_cache, _ = forward(params, cfg, tokens, mode="decode", cache=cache)
+    new_cache["pos"] = cache["pos"] + 1
+    logits = _logits(h[:, 0], params, cfg)
+    return logits, new_cache

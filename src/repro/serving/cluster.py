@@ -1,0 +1,185 @@
+"""Discrete-event simulation of a heterogeneous continuous-batching
+cluster (the vLLM-analogue substrate).
+
+Each instance runs iteration-level continuous batching: every decode
+iteration advances all running sequences by one token in
+``tier.tpot(batch, mean_ctx)`` seconds (the calibrated roofline), admits
+queued requests into free slots (charging roofline prefill time, which
+blocks the engine like vLLM's default non-chunked prefill), and retires
+finished sequences. Telemetry is a non-blocking snapshot refreshed at
+iteration boundaries — the paper's worker-side-cache contract (§5) — so
+the scheduler always reads slightly-stale state, which is exactly what
+dead reckoning exists to correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .request import Request
+from .tiers import Tier
+
+
+@dataclasses.dataclass
+class _Seq:
+    req: Request
+    target_tokens: int          # true completion length for this model
+    max_tokens: int             # dispatch-time clamp (budget worst case)
+    budget_tokens: Optional[int]  # streaming early-stop bound
+    generated: int = 0
+    ctx: int = 0                # prompt + generated
+
+
+class Instance:
+    def __init__(self, iid: str, tier: Tier, model_idx: int, sim: "ClusterSim"):
+        self.iid = iid
+        self.tier = tier
+        self.model_idx = model_idx
+        self.sim = sim
+        self.queue: List[Tuple[Request, float]] = []   # (req, pred_len)
+        self.running: List[_Seq] = []
+        self.iter_scheduled = False
+        self.busy_until = 0.0
+        self.alive = True
+        # telemetry snapshot (refreshed at iteration boundaries)
+        self.snapshot: Dict = {"queue_depth": 0, "pending_decode": 0.0,
+                               "batch_size": 0, "free_slots": tier.max_batch,
+                               "mean_ctx": 0.0, "t": 0.0}
+        self.total_tokens = 0
+
+    # -- scheduler-facing ---------------------------------------------------
+    def submit(self, req: Request, t: float, pred_len: float,
+               max_tokens: Optional[int]):
+        req.instance = self.iid
+        req.model_idx = self.model_idx
+        req.dispatch_time = t
+        req.pred_len = pred_len
+        req.max_tokens = max_tokens
+        self.queue.append((req, pred_len))
+        self._kick(t)
+
+    def telemetry(self) -> Dict:
+        return dict(self.snapshot)
+
+    # -- engine -------------------------------------------------------------
+    def _kick(self, t: float):
+        if not self.iter_scheduled and self.alive:
+            self.iter_scheduled = True
+            self.sim.push(max(t, self.busy_until), self._iterate)
+
+    def _admit(self, t: float) -> float:
+        """Admit queued requests into free slots; returns prefill seconds."""
+        dt = 0.0
+        while self.queue and len(self.running) < self.tier.max_batch:
+            req, pred_len = self.queue.pop(0)
+            true_len = int(req.true_length[self.model_idx])
+            max_tok = req.max_tokens or 10 ** 9
+            budget_tok = None
+            if req.budget is not None:
+                # streaming early-stop: remaining budget at output prices
+                in_cost = req.prompt.len_in * self.tier.price_in / 1e6
+                rem = max(req.budget - in_cost, 0.0)
+                budget_tok = int(rem / (self.tier.price_out / 1e6 + 1e-30))
+            dt += self.tier.prefill_time(req.prompt.len_in)
+            req.first_token_time = t + dt
+            self.running.append(_Seq(
+                req=req, target_tokens=true_len, max_tokens=max_tok,
+                budget_tokens=budget_tok, ctx=req.prompt.len_in))
+        return dt
+
+    def _iterate(self, t: float):
+        self.iter_scheduled = False
+        if not self.alive:
+            return
+        dt = self._admit(t)
+        if self.running:
+            b = len(self.running)
+            mean_ctx = sum(s.ctx for s in self.running) / b
+            dt += self.tier.tpot(b, mean_ctx)
+            done = []
+            for s in self.running:
+                s.generated += 1
+                s.ctx += 1
+                self.total_tokens += 1
+                limit = min(s.target_tokens, s.max_tokens,
+                            s.budget_tokens if s.budget_tokens is not None
+                            else 10 ** 9)
+                if s.generated >= limit:
+                    done.append(s)
+            for s in done:
+                self.running.remove(s)
+                r = s.req
+                r.finish_time = t + dt
+                r.tokens_out = s.generated
+                r.exhausted = s.generated < s.target_tokens
+                self.sim.completed.append(r)
+        self.busy_until = t + dt
+        self.snapshot = {
+            "queue_depth": len(self.queue),
+            "pending_decode": float(sum(
+                max(min(s.max_tokens, int(s.req.pred_len or s.max_tokens))
+                    - s.generated, 1) for s in self.running)),
+            "batch_size": len(self.running),
+            "free_slots": self.tier.max_batch - len(self.running),
+            "mean_ctx": (sum(s.ctx for s in self.running)
+                         / max(len(self.running), 1)),
+            "t": t + dt,
+        }
+        if self.running or self.queue:
+            self.sim.push(t + dt, self._iterate)
+            self.iter_scheduled = True
+
+    def fail(self):
+        """Node failure: mark dead; running + queued requests fail."""
+        self.alive = False
+        for s in self.running:
+            s.req.failed = True
+            self.sim.completed.append(s.req)
+        for req, _ in self.queue:
+            req.failed = True
+            self.sim.completed.append(req)
+        self.running = []
+        self.queue = []
+
+
+class ClusterSim:
+    """Event-driven cluster + pluggable scheduler callback."""
+
+    def __init__(self, tiers: List[Tier], model_names: List[str],
+                 seed: int = 0):
+        self.tiers = tiers
+        self.model_names = model_names
+        self.instances: List[Instance] = []
+        for tier in tiers:
+            midx = model_names.index(tier.model)
+            for j in range(tier.n_instances):
+                self.instances.append(
+                    Instance(f"{tier.name}#{j}", tier, midx, self))
+        self.by_id = {i.iid: i for i in self.instances}
+        self.completed: List[Request] = []
+        self._events: List = []
+        self._counter = itertools.count()
+        self.now = 0.0
+
+    def push(self, t: float, fn: Callable[[float], None]):
+        heapq.heappush(self._events, (t, next(self._counter), fn))
+
+    def run(self, until: float = float("inf")):
+        while self._events:
+            t, _, fn = heapq.heappop(self._events)
+            if t > until:
+                heapq.heappush(self._events, (t, next(self._counter), fn))
+                break
+            self.now = t
+            fn(t)
+
+    def telemetry(self) -> Dict[str, Dict]:
+        return {i.iid: i.telemetry() for i in self.instances
+                if i.alive}
+
+    def alive_instances(self) -> List[Instance]:
+        return [i for i in self.instances if i.alive]

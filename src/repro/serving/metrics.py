@@ -1,0 +1,65 @@
+"""Per-cell metric aggregation: the paper's four axes + residual
+decomposition + tails."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from .request import Request
+from .tiers import Tier
+
+
+def _pct(x, p):
+    return float(np.percentile(x, p)) if len(x) else float("nan")
+
+
+def aggregate(reqs: List[Request], tiers: List[Tier],
+              model_names: List[str], wall: Optional[float] = None
+              ) -> Dict:
+    done = [r for r in reqs if r.finish_time is not None and not r.failed]
+    failed = [r for r in reqs if r.failed]
+    e2e = np.array([r.e2e for r in done])
+    ttft = np.array([r.ttft for r in done if r.ttft is not None])
+    lookup_q = np.array([r.lookup_quality() for r in done])
+    served_q = np.array([r.served_quality() for r in done])
+    tier_by_model = {t.model: t for t in tiers}
+    costs = []
+    for r in done:
+        t = tier_by_model[model_names[r.model_idx]]
+        costs.append(t.cost(r.prompt.len_in, r.tokens_out))
+    costs = np.asarray(costs)
+    if wall is None and done:
+        wall = max(r.finish_time for r in done) \
+            - min(r.arrival for r in reqs)
+    mix = {}
+    for r in done:
+        m = model_names[r.model_idx]
+        mix[m] = mix.get(m, 0) + 1
+    mix = {m: c / max(len(done), 1) for m, c in sorted(mix.items())}
+    resid = np.array([(r.sched_compute + r.sched_batch_wait
+                       + r.sched_stats_fetch + r.router_queue_wait)
+                      for r in done])
+    return {
+        "n": len(done), "failed": len(failed),
+        "quality": float(lookup_q.mean()) if len(done) else 0.0,
+        "served_quality": float(served_q.mean()) if len(done) else 0.0,
+        "mean_e2e": float(e2e.mean()) if len(done) else float("nan"),
+        "p95_e2e": _pct(e2e, 95), "p99_e2e": _pct(e2e, 99),
+        "mean_ttft": float(ttft.mean()) if len(ttft) else float("nan"),
+        "p99_ttft": _pct(ttft, 99),
+        "cost_per_req": float(costs.mean()) if len(done) else 0.0,
+        "throughput": len(done) / wall if wall else 0.0,
+        "mix": mix,
+        "exhausted_frac": float(np.mean([r.exhausted for r in done]))
+        if done else 0.0,
+        "mean_residual": float(resid.mean()) if len(done) else 0.0,
+        "residual_compute": float(np.mean(
+            [r.sched_compute for r in done])) if done else 0.0,
+        "residual_batch_wait": float(np.mean(
+            [r.sched_batch_wait for r in done])) if done else 0.0,
+        "residual_stats_fetch": float(np.mean(
+            [r.sched_stats_fetch for r in done])) if done else 0.0,
+        "residual_router_queue": float(np.mean(
+            [r.router_queue_wait for r in done])) if done else 0.0,
+    }

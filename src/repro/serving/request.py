@@ -1,0 +1,71 @@
+"""Request record flowing through the serving stack."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from .world import Prompt
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Prompt
+    arrival: float
+    true_quality: np.ndarray       # (M,) hidden from the scheduler
+    true_length: np.ndarray        # (M,) hidden from the scheduler
+    budget: Optional[float] = None  # USD, optional per-request cost budget
+
+    # filled at dispatch
+    instance: Optional[str] = None
+    model_idx: Optional[int] = None
+    dispatch_time: Optional[float] = None
+    pred_len: Optional[float] = None
+    max_tokens: Optional[int] = None
+
+    # filled at completion
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    tokens_out: int = 0
+    exhausted: bool = False        # stopped by budget early-stop/clamp
+    failed: bool = False
+
+    # scheduler-side accounting (off-instance residual decomposition)
+    sched_compute: float = 0.0
+    sched_batch_wait: float = 0.0
+    sched_stats_fetch: float = 0.0
+    router_queue_wait: float = 0.0
+
+    @property
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival
+
+    def served_quality(self) -> float:
+        """Quality of the actually-served text: the routing-decision
+        lookup value, discounted when the response was truncated
+        (budget exhaustion -> near-empty answers score near zero)."""
+        if self.model_idx is None or self.finish_time is None:
+            return 0.0
+        q = float(self.true_quality[self.model_idx])
+        need = float(self.true_length[self.model_idx])
+        if self.tokens_out + 0.5 >= need or need <= 0:
+            return q
+        frac = self.tokens_out / need
+        return q * frac ** 0.7
+
+    def lookup_quality(self) -> float:
+        """The routing-decision metric (§4.2): offline per-(prompt, model)
+        score of the chosen model, independent of truncation."""
+        if self.model_idx is None:
+            return 0.0
+        return float(self.true_quality[self.model_idx])

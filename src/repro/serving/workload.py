@@ -1,0 +1,53 @@
+"""Arrival processes: Poisson (the paper's default), gamma-bursty and
+square-wave (§6.9 non-stationary robustness)."""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional
+
+import numpy as np
+
+
+def poisson_arrivals(lam: float, n: int, seed: int = 0,
+                     start: float = 0.0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / lam, n)
+    return start + np.cumsum(gaps)
+
+
+def gamma_bursty_arrivals(lam: float, n: int, cv: float = 3.0,
+                          seed: int = 0) -> np.ndarray:
+    """Gamma-distributed gaps with mean 1/lam and coefficient of
+    variation cv (cv > 1 = bursty)."""
+    rng = np.random.default_rng(seed)
+    shape = 1.0 / cv ** 2
+    scale = 1.0 / (lam * shape)
+    return np.cumsum(rng.gamma(shape, scale, n))
+
+
+def square_wave_arrivals(lam: float, n: int, period: float = 60.0,
+                         high_frac: float = 1.5, seed: int = 0
+                         ) -> np.ndarray:
+    """Alternates between high_frac*lam and (2-high_frac)*lam every
+    period/2 seconds; matched mean lam."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    lo = (2.0 - high_frac) * lam
+    hi = high_frac * lam
+    for _ in range(n):
+        phase_hi = (t % period) < period / 2
+        rate = hi if phase_hi else lo
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        out.append(t)
+    return np.asarray(out)
+
+
+def make_arrivals(kind: str, lam: float, n: int, seed: int = 0
+                  ) -> np.ndarray:
+    if kind == "poisson":
+        return poisson_arrivals(lam, n, seed)
+    if kind == "gamma":
+        return gamma_bursty_arrivals(lam, n, seed=seed)
+    if kind == "square":
+        return square_wave_arrivals(lam, n, seed=seed)
+    raise ValueError(kind)

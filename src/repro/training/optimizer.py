@@ -1,0 +1,98 @@
+"""AdamW with global-norm clipping and cosine/linear LR schedules.
+
+Self-contained (no optax). State is a plain pytree of f32 moments shaped
+like the params, so the launcher can ZeRO-shard it with ordinary
+PartitionSpecs; the update is pure jnp and lowers under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"      # cosine | constant
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.float32(0.0)))
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda tree: jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+_NO_DECAY = ("norm", "scale", "bias", "lam", "A_log", "dt_bias", "D_skip",
+             "positions", "pos_dec")
+
+
+def _decay_mask(path) -> bool:
+    s = jax.tree_util.keystr(path)
+    return not any(t in s for t in _NO_DECAY)
+
+
+def update(cfg: AdamWConfig, grads, state, params
+           ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = schedule_lr(cfg, step)
+    b1c = 1.0 - cfg.b1 ** (step.astype(jnp.float32) + 1.0)
+    b2c = 1.0 - cfg.b2 ** (step.astype(jnp.float32) + 1.0)
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    gs = jax.tree.leaves(grads)
+    ms = jax.tree.leaves(state["m"])
+    vs = jax.tree.leaves(state["v"])
+    out = [upd(pa, p, g, m, v)
+           for (pa, p), g, m, v in zip(flat, gs, ms, vs)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_state = {"m": new_m, "v": new_v, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

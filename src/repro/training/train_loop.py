@@ -1,0 +1,65 @@
+"""Fault-tolerant training loop: jitted step + periodic atomic
+checkpoints + crash-restart resume. Used by examples/train_small.py and
+the integration tests."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.launch.steps import init_opt_state, make_train_step
+from repro.models import Model
+from repro.training import optimizer as opt
+from repro.training.data import TokenStream
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    n_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 20
+    grad_compression: bool = False
+    microbatches: int = 1
+    ocfg: opt.AdamWConfig = dataclasses.field(
+        default_factory=lambda: opt.AdamWConfig(
+            lr=1e-3, warmup_steps=20, total_steps=400))
+
+
+def train(model: Model, data: TokenStream, tcfg: TrainConfig,
+          seed: int = 0, log: Callable[[str], None] = print) -> Dict:
+    params = model.init(jax.random.key(seed))
+    opt_state = init_opt_state(params, compression=tcfg.grad_compression)
+    start_step = 0
+    mgr = None
+    if tcfg.ckpt_dir:
+        mgr = CheckpointManager(tcfg.ckpt_dir)
+        latest = mgr.latest_step()
+        if latest is not None:
+            (params, opt_state), start_step = (
+                mgr.restore((params, opt_state))[0], latest)
+            log(f"resumed from checkpoint step {start_step}")
+    step_fn = jax.jit(make_train_step(
+        model, tcfg.ocfg, microbatches=tcfg.microbatches,
+        grad_compression=tcfg.grad_compression))
+    losses = []
+    it = data.batches()
+    t0 = time.time()
+    for step in range(start_step, tcfg.n_steps):
+        batch = next(it)
+        params, opt_state, mets = step_fn(params, opt_state, batch)
+        losses.append(float(mets["loss"]))
+        if step % tcfg.log_every == 0 or step == tcfg.n_steps - 1:
+            log(f"step {step:5d} loss {losses[-1]:.4f} "
+                f"gnorm {float(mets['grad_norm']):.3f} "
+                f"({time.time()-t0:.0f}s)")
+        if mgr and (step + 1) % tcfg.ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state))
+    return {"params": params, "opt_state": opt_state,
+            "losses": np.asarray(losses),
+            "final_loss": losses[-1] if losses else float("nan"),
+            "first_loss": losses[0] if losses else float("nan")}

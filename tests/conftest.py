@@ -1,0 +1,15 @@
+import os
+import sys
+
+# smoke tests & benches must see ONE device (the dry-run sets 512 itself,
+# in a subprocess) — do not set device-count flags here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,116 @@
+"""Distribution layer: sharding rules are always divisible, cache specs
+cover every leaf, elastic membership + staleness, HLO cost walker."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, input_specs, smoke_variant
+from repro.distributed.elastic import ElasticMembership
+from repro.models import Model
+from repro.models.config import SHAPES
+
+
+class _FakeMesh:
+    """Mesh stand-in with .shape/.axis_names (no devices needed)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "gemma3-27b",
+                                  "mixtral-8x7b", "mamba2-1.3b",
+                                  "recurrentgemma-2b", "whisper-tiny"])
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    from repro.launch import sharding as shr
+    mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16} if multi_pod
+                     else {"data": 16, "model": 16})
+    cfg = ARCHS[arch].replace(vocab_pad_to=256)
+    model = Model(cfg)
+    specs = shr.param_pspecs(model.param_specs(), mesh, fsdp=True)
+    leaves = jax.tree_util.tree_flatten_with_path(
+        model.param_specs())[0]
+    spec_leaves = jax.tree.leaves(specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for (path, sds), spec in zip(leaves, spec_leaves):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            n = int(np.prod([mesh.shape[a] for a in names]))
+            assert sds.shape[dim] % n == 0, \
+                (jax.tree_util.keystr(path), sds.shape, spec)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("granite-3-2b", "decode_32k"), ("mixtral-8x7b", "long_500k"),
+    ("mamba2-1.3b", "long_500k"), ("whisper-tiny", "decode_32k")])
+def test_cache_specs_divisible(arch, shape):
+    from repro.launch import sharding as shr
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    cfg = ARCHS[arch].replace(vocab_pad_to=256)
+    model = Model(cfg)
+    sp = SHAPES[shape]
+    cache = model.cache_specs(sp.global_batch, sp.seq_len)
+    specs = shr.cache_pspecs(cache, mesh, sp.global_batch)
+    for (path, sds), spec in zip(
+            jax.tree_util.tree_flatten_with_path(cache)[0],
+            jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))):
+        for dim, names in enumerate(spec):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            n = int(np.prod([mesh.shape[a] for a in names]))
+            assert sds.shape[dim] % n == 0, \
+                (jax.tree_util.keystr(path), sds.shape, spec)
+
+
+def test_input_specs_all_cells():
+    for arch, cfg in ARCHS.items():
+        for sname, sp in SHAPES.items():
+            specs = input_specs(cfg, sp)
+            assert "tokens" in specs
+            for v in specs.values():
+                assert all(d > 0 for d in v.shape)
+
+
+def test_elastic_membership_and_straggler():
+    em = ElasticMembership(heartbeat_timeout=2.0)
+    em.register("a", "t1", now=0.0)
+    em.register("b", "t1", now=0.0)
+    assert set(em.active(1.0)) == {"a", "b"}
+    em.heartbeat("a", 3.0)
+    assert set(em.active(3.5)) == {"a"}          # b quarantined
+    em.heartbeat("b", 4.0)
+    assert set(em.active(4.1)) == {"a", "b"}     # b re-admitted
+    # staleness penalty grows with telemetry age
+    p0 = em.staleness_penalty("a", 3.0)
+    p1 = em.staleness_penalty("a", 4.5)
+    assert p1 > p0 >= 1.0
+
+
+def test_elastic_persistence(tmp_path):
+    em = ElasticMembership()
+    em.register("x", "tier", now=1.0)
+    em.save(str(tmp_path / "members.json"))
+    em2 = ElasticMembership.load(str(tmp_path / "members.json"))
+    assert "x" in em2.members
+
+
+def test_hlo_walker_trip_counts():
+    import jax.numpy as jnp
+    from benchmarks.hlo_cost import analyze
+
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    hlo = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32),
+        jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)).compile().as_text()
+    r = analyze(hlo)
+    assert abs(r["flops"] - 12 * 2 * 64 ** 3) / (12 * 2 * 64 ** 3) < 0.05

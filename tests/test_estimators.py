@@ -1,0 +1,95 @@
+"""Estimator stack: encoder determinism, KNN generalization, GBM heads,
+analytical latency combine."""
+import numpy as np
+import pytest
+
+from repro.estimators.embedding import SentenceEncoder
+from repro.estimators.gbm import GradientBoostedRegressor, predict_packed
+from repro.estimators.knn import KNNEstimator
+from repro.estimators.latency import LatencyHead, analytic_latency, \
+    tpot_features
+
+
+def test_encoder_deterministic_and_normalized():
+    enc = SentenceEncoder(seed=7)
+    toks = np.arange(64).reshape(2, 32)
+    e1 = enc.encode(toks)
+    e2 = enc.encode(toks)
+    np.testing.assert_allclose(e1, e2)
+    np.testing.assert_allclose(np.linalg.norm(e1, axis=1), 1.0, rtol=1e-4)
+
+
+def test_encoder_similarity_structure():
+    """Prompts sharing token statistics embed closer than disjoint ones."""
+    enc = SentenceEncoder(seed=7)
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 200, (1, 64))
+    a2 = a.copy()
+    a2[0, :8] = rng.integers(0, 200, 8)         # small perturbation
+    b = rng.integers(2000, 2200, (1, 64))       # different vocab region
+    ea, ea2, eb = enc.encode(a), enc.encode(a2), enc.encode(b)
+    assert float((ea @ ea2.T)[0, 0]) > float((ea @ eb.T)[0, 0])
+
+
+def test_knn_recovers_latent_quality():
+    from repro.serving.world import build_dataset, paper_world
+    world, names = paper_world(seed=0)
+    ds = build_dataset(world, n=1500)
+    enc = SentenceEncoder(seed=7)
+
+    def embed(prompts):
+        toks = np.zeros((len(prompts), 128), np.int32)
+        lens = []
+        for i, p in enumerate(prompts):
+            n = min(len(p.tokens), 128)
+            toks[i, :n] = p.tokens[:n]
+            lens.append(n)
+        return enc.encode(toks, np.array(lens))
+
+    ptr, Qtr, Ltr = ds.split("train")
+    pte, Qte, Lte = ds.split("test")
+    knn = KNNEstimator(k=10).fit(embed(ptr), Qtr, Ltr)
+    acc = knn.best_model_accuracy(embed(pte), Qte)
+    assert acc > 0.30, acc                     # well above random (0.25)
+    qh, lh = knn.query(embed(pte))
+    assert np.abs(qh - Qte).mean() < 0.18
+    assert np.mean(np.abs(lh - Lte) / Lte) < 1.0
+
+
+def test_gbm_packed_matches_numpy():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(400, 4)).astype(np.float32)
+    y = (X[:, 0] - 0.5 * X[:, 2] ** 2).astype(np.float32)
+    g = GradientBoostedRegressor(n_trees=15, depth=3).fit(X, y)
+    import jax.numpy as jnp
+    p1 = g.predict(X[:50])
+    p2 = np.asarray(predict_packed(g.pack(), jnp.asarray(X[:50])))
+    np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-4)
+
+
+def test_latency_head_learns_tpot():
+    from repro.serving.tiers import paper_pool_tiers
+    rng = np.random.default_rng(2)
+    t = paper_pool_tiers()[1]
+    X, y = [], []
+    for _ in range(800):
+        b = rng.integers(1, 32)
+        ctx = rng.uniform(64, 2048)
+        X.append(tpot_features(b, b * 100, ctx))
+        y.append(t.tpot(b, ctx))
+    head = LatencyHead(t.name, nominal_tpot=t.tpot(8, 500)).fit(
+        np.stack(X), np.asarray(y, np.float32))
+    pred = head.tpot_batch(np.stack(X))
+    mae = np.abs(pred - np.asarray(y)).mean()
+    assert mae < 0.002, mae                     # < 2 ms/token
+
+
+def test_analytic_latency_free_slot():
+    T = analytic_latency(np.array([[0.01]]), np.array([[500.0]]),
+                         np.array([[4.0]]), np.array([[100.0]]),
+                         np.array([[True]]))
+    np.testing.assert_allclose(T, 0.01 * 100.0)   # no wait term
+    T2 = analytic_latency(np.array([[0.01]]), np.array([[500.0]]),
+                          np.array([[4.0]]), np.array([[100.0]]),
+                          np.array([[False]]))
+    np.testing.assert_allclose(T2, 0.01 * (125 + 100))

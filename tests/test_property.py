@@ -1,0 +1,105 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import score_matrix
+from repro.core.assignment import greedy_assign, lpt_order
+from repro.core.budget import admission_mask
+from repro.models.blocks import causal_conv, conv_step
+
+import jax.numpy as jnp
+
+
+@st.composite
+def weights_st(draw):
+    a = draw(st.floats(0, 1))
+    b = draw(st.floats(0, 1))
+    c = draw(st.floats(0, 1))
+    s = a + b + c
+    if s == 0:
+        return (1 / 3, 1 / 3, 1 / 3)
+    return (a / s, b / s, c / s)
+
+
+@settings(max_examples=30, deadline=None)
+@given(weights_st(), st.integers(1, 10), st.integers(1, 6),
+       st.integers(0, 10_000))
+def test_greedy_always_assigns(w, R, I, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.uniform(0, 1, (R, I))
+    c = rng.uniform(1e-7, 1e-4, (R, I))
+    ln = rng.uniform(1, 600, (R, I))
+    tpot = rng.uniform(1e-3, 0.1, I)
+    choice, info = greedy_assign(
+        lpt_order(ln.max(1)), q, c, ln, tpot, rng.uniform(0, 1e4, I),
+        rng.integers(1, 16, I).astype(float),
+        rng.integers(0, 8, I).astype(float), np.full(I, 32.0), w)
+    assert choice.min() >= 0 and choice.max() < I
+    assert np.all(info["est_latency"] >= 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(weights_st(), st.integers(2, 8), st.integers(2, 5),
+       st.integers(0, 10_000))
+def test_score_normalization_invariant(w, R, I, seed):
+    """Scaling all costs (or latencies) by a constant must not change
+    the score matrix (per-request normalization, §4.1)."""
+    rng = np.random.default_rng(seed)
+    q = rng.uniform(0, 1, (R, I))
+    c = rng.uniform(1e-7, 1e-4, (R, I))
+    T = rng.uniform(1e-3, 60.0, (R, I))
+    s1 = score_matrix(q, c, T, w)
+    s2 = score_matrix(q, c * 7.3, T * 0.11, w)
+    np.testing.assert_allclose(s1, s2, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 12), st.integers(2, 5), st.integers(0, 10_000))
+def test_budget_admission_soundness(R, I, seed):
+    rng = np.random.default_rng(seed)
+    budgets = np.where(rng.uniform(size=R) < 0.5,
+                       rng.uniform(1e-6, 1e-4, R), np.nan)
+    len_in = rng.uniform(10, 500, R)
+    pred = rng.uniform(10, 800, (R, I))
+    p_in = rng.uniform(0.01, 0.5, I)
+    p_out = rng.uniform(0.01, 0.5, I)
+    allowed, c_hat = admission_mask(budgets, len_in, pred, p_in, p_out)
+    # every request keeps at least one candidate
+    assert allowed.any(axis=1).all()
+    # allowed multi-candidate sets respect the budget (except the
+    # cheapest-fallback singleton case)
+    for r in range(R):
+        if np.isnan(budgets[r]) or allowed[r].sum() == 1:
+            continue
+        assert np.all(c_hat[r][allowed[r]] <= budgets[r] + 1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 24), st.integers(1, 8),
+       st.integers(2, 4), st.integers(0, 1_000))
+def test_conv_step_matches_causal_conv(B, S, C, width, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(B, S, C)), jnp.float32)
+    p = {"w": jnp.asarray(rng.normal(size=(width, C)), jnp.float32)}
+    full = causal_conv(x, p, width)
+    state = jnp.zeros((B, width - 1, C), jnp.float32)
+    outs = []
+    for t in range(S):
+        y, state = conv_step(x[:, t], state, p, width)
+        outs.append(y)
+    step = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(8, 64), st.integers(2, 6), st.integers(0, 10_000))
+def test_gbm_reduces_training_error(n, f, seed):
+    from repro.estimators.gbm import GradientBoostedRegressor
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(max(n, 16), f)).astype(np.float32)
+    y = (X[:, 0] * 2 + np.sin(X[:, 1 % f])).astype(np.float32)
+    base_mse = float(np.mean((y - y.mean()) ** 2))
+    g = GradientBoostedRegressor(n_trees=20, depth=3).fit(X, y)
+    mse = float(np.mean((g.predict(X) - y) ** 2))
+    assert mse <= base_mse + 1e-6

@@ -1,0 +1,72 @@
+"""Per-architecture smoke tests: a REDUCED same-family config runs one
+forward/train step on CPU with correct shapes and no NaNs (brief
+requirement (f))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, list_archs, smoke_variant
+from repro.models import Model
+from repro.training.data import batch_for
+
+ALL = list_archs()
+
+
+@pytest.mark.parametrize("arch", ALL)
+def test_train_step_smoke(arch):
+    cfg = smoke_variant(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = batch_for(cfg, seq_len=32, global_batch=2, seed=1)
+    batch = {k: jnp.asarray(v) for k, v in batch.items()}
+    loss, mets = model.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda x: jnp.sum(jnp.square(
+            x.astype(jnp.float32))), grads))
+    assert bool(jnp.isfinite(gn)), f"{arch} grads not finite"
+    assert float(gn) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "mixtral-8x7b",
+                                  "mamba2-1.3b", "recurrentgemma-2b",
+                                  "whisper-tiny"])
+def test_prefill_decode_shapes(arch):
+    cfg = smoke_variant(ARCHS[arch])
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S0 = 2, 8
+    toks = jnp.ones((B, S0), jnp.int32)
+    if cfg.is_encdec:
+        frames = jnp.zeros((B, 16, cfg.frontend_dim), jnp.float32)
+        logits, cache = model.prefill(params, {"frames": frames,
+                                               "tokens": toks})
+    else:
+        logits, cache = model.prefill(params, {"tokens": toks},
+                                      pad_to=S0 + 4)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    logits2, cache = model.decode(params, cache, nxt)
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_param_counts_match_pool_card():
+    # total params should be within tolerance of the pool card's sizing
+    expect = {"granite-3-2b": 2.5e9, "phi3-mini-3.8b": 3.8e9,
+              "gemma3-27b": 27e9, "mixtral-8x7b": 46.7e9,
+              "mamba2-1.3b": 1.3e9}
+    for arch, n in expect.items():
+        got = ARCHS[arch].param_counts()["total"]
+        assert abs(got - n) / n < 0.12, (arch, got)
+
+
+def test_moe_active_params():
+    pc = ARCHS["granite-moe-3b-a800m"].param_counts()
+    assert pc["total"] > 3.0e9
+    assert 0.7e9 < pc["active"] < 1.1e9

@@ -1,0 +1,90 @@
+"""End-to-end behaviour tests for the paper's system: the fused
+scheduler's headline properties on a small world."""
+import numpy as np
+import pytest
+
+from repro.core import (EstimatorBundle, PRESETS, PipelineConfig,
+                        PipelineScheduler, RBConfig, RouteBalance,
+                        make_requests, run_cell)
+from repro.core.dispatchers import ShortestQueue
+from repro.core.routers import PassthroughRouter
+from repro.serving.tiers import paper_pool_tiers
+from repro.serving.workload import poisson_arrivals
+from repro.serving.world import build_dataset, paper_world
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    world, names = paper_world(seed=0)
+    ds = build_dataset(world, n=1500)
+    tiers = paper_pool_tiers()
+    bundle = EstimatorBundle.train(ds, tiers, names)
+    return dict(names=names, ds=ds, tiers=tiers, bundle=bundle)
+
+
+def _run(ctx, sched, lam=10.0, n=200, seed=0):
+    arr = poisson_arrivals(lam, n, seed=seed)
+    reqs = make_requests(ctx["ds"], "test", arr)
+    return run_cell(sched, ctx["tiers"], ctx["names"], reqs)
+
+
+def test_fused_pareto_dominates_load_only(ctx):
+    """A load-only balancer is Pareto-dominated: some point of the
+    RouteBalance weight family matches its quality at lower-or-equal
+    latency and cost, or beats its quality outright (§1, Fig 5)."""
+    lb = _run(ctx, PipelineScheduler(
+        PassthroughRouter(), ShortestQueue(), ctx["bundle"], ctx["tiers"],
+        PipelineConfig(deployment="concurrent")))
+    dominated = False
+    for w in (PRESETS["uniform"], (0.55, 0.25, 0.2), PRESETS["quality"]):
+        rb = _run(ctx, RouteBalance(RBConfig(weights=w), ctx["bundle"],
+                                    ctx["tiers"]))
+        if (rb["quality"] >= lb["quality"] - 0.005
+                and rb["mean_e2e"] <= lb["mean_e2e"] * 1.10):
+            dominated = True
+            break
+    assert dominated, (lb["quality"], lb["mean_e2e"])
+
+
+def test_weight_vector_traces_frontier(ctx):
+    """Turning only the weight vector spans cost -> quality (§6.2)."""
+    qs, costs = [], []
+    for w in (PRESETS["cost"], PRESETS["uniform"], PRESETS["quality"]):
+        m = _run(ctx, RouteBalance(RBConfig(weights=w), ctx["bundle"],
+                                   ctx["tiers"]))
+        qs.append(m["quality"])
+        costs.append(m["cost_per_req"])
+    assert qs[0] <= qs[1] <= qs[2] + 1e-9
+    assert costs[0] <= costs[2]
+
+
+def test_latency_term_shifts_mix_off_slow_tier(ctx):
+    """Pricing latency at model-selection time steers traffic off the
+    slowest tier (§6.3 arm1 vs arm2)."""
+    full = _run(ctx, RouteBalance(RBConfig(latency_mode="full"),
+                                  ctx["bundle"], ctx["tiers"]))
+    off = _run(ctx, RouteBalance(RBConfig(latency_mode="off_reactive"),
+                                 ctx["bundle"], ctx["tiers"]))
+    share = lambda m, tag: sum(v for k, v in m["mix"].items() if tag in k)
+    assert share(full, "72b") <= share(off, "72b") + 1e-9
+    assert full["mean_e2e"] <= off["mean_e2e"] * 1.10
+
+
+def test_static_prior_close_to_full(ctx):
+    """Arm 4: a static per-tier prior nearly reproduces the full
+    objective — the learned predictor is not load-bearing (§6.3)."""
+    full = _run(ctx, RouteBalance(RBConfig(latency_mode="full"),
+                                  ctx["bundle"], ctx["tiers"]))
+    prior = _run(ctx, RouteBalance(RBConfig(latency_mode="static_prior"),
+                                   ctx["bundle"], ctx["tiers"]))
+    assert abs(prior["quality"] - full["quality"]) < 0.05
+    assert prior["mean_e2e"] < full["mean_e2e"] * 1.6
+
+
+def test_deterministic_given_seed(ctx):
+    m1 = _run(ctx, RouteBalance(RBConfig(charge_compute=False),
+                                ctx["bundle"], ctx["tiers"]), seed=3)
+    m2 = _run(ctx, RouteBalance(RBConfig(charge_compute=False),
+                                ctx["bundle"], ctx["tiers"]), seed=3)
+    assert m1["quality"] == m2["quality"]
+    assert m1["cost_per_req"] == m2["cost_per_req"]
