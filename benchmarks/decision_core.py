@@ -1,0 +1,97 @@
+"""Batch-decision latency: numpy greedy loop vs the jitted decision core.
+
+One "decision" = the whole per-batch hot-path tail after the estimator
+feed: Eq. 2 admission, LPT ordering and the dead-reckoned greedy pass
+(Eq. 1 per request). The paper's headline is that this stays cheap on
+the request hot path (~32 ms/batch at 12 req/s, §6.3); the jitted core
+is what keeps it cheap as R (batch) and I (instances) scale.
+
+Rows: decision_core/<backend>_R<R>_I<I>, us per *batch* decision, with
+per-request us derived. Run directly or via ``python -m benchmarks.run
+decision_core``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import csv_row
+from repro.core import PRESETS
+from repro.core.assignment import greedy_assign, lpt_order
+from repro.core.budget import admission_mask
+from repro.core import decision_jax
+
+
+def _problem(rng, R, I):
+    q = rng.uniform(0, 1, (R, I))
+    ln = rng.uniform(20, 500, (R, I))
+    plm = ln.max(1)
+    tpot = rng.uniform(0.005, 0.05, I)
+    nominal = tpot * 0.9
+    d = rng.uniform(0, 3000, I)
+    b = rng.integers(1, 12, I).astype(float)
+    free = rng.integers(0, 6, I).astype(float)
+    maxb = np.full(I, 48.0)
+    price_in = rng.uniform(0.05, 0.5, I)
+    price_out = rng.uniform(0.05, 0.5, I)
+    budgets = np.where(rng.uniform(size=R) < 0.5,
+                       rng.uniform(1e-5, 3e-4, R), np.nan)
+    len_in = rng.uniform(10, 500, R)
+    return (q, ln, plm, tpot, nominal, d, b, free, maxb, budgets,
+            len_in, price_in, price_out)
+
+
+def _time(fn, n=30, warmup=5):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n
+
+
+def decide_numpy(p, weights):
+    (q, ln, plm, tpot, nominal, d, b, free, maxb, budgets,
+     len_in, price_in, price_out) = p
+    allowed, c_hat = admission_mask(budgets, len_in, ln,
+                                    price_in, price_out)
+    order = lpt_order(plm)
+    return greedy_assign(order, q, c_hat, ln, tpot, d, b, free, maxb,
+                         weights, allowed, latency_mode="full",
+                         nominal_tpot=nominal)[0]
+
+
+def decide_jax(p, weights):
+    (q, ln, plm, tpot, nominal, d, b, free, maxb, budgets,
+     len_in, price_in, price_out) = p
+    return decision_jax.decide(q, ln, plm, tpot, nominal, d, b, free,
+                               maxb, budgets, len_in, price_in,
+                               price_out, weights)[0]
+
+
+def main():
+    rng = np.random.default_rng(0)
+    w = PRESETS["uniform"]
+    speedups = {}
+    for I in (13, 50, 200):
+        for R in (8, 16, 64, 256):
+            p = _problem(rng, R, I)
+            ch_np = decide_numpy(p, w)
+            ch_jx = decide_jax(p, w)
+            agree = float((ch_np == ch_jx).mean())
+            dt_np = _time(lambda: decide_numpy(p, w))
+            dt_jx = _time(lambda: decide_jax(p, w))
+            speedups[(R, I)] = dt_np / dt_jx
+            csv_row(f"decision_core/numpy_R{R}_I{I}", dt_np * 1e6,
+                    f"per_req_us={dt_np/R*1e6:.1f}")
+            csv_row(f"decision_core/jax_R{R}_I{I}", dt_jx * 1e6,
+                    f"per_req_us={dt_jx/R*1e6:.1f};"
+                    f"speedup={dt_np/dt_jx:.2f}x;agree={agree:.3f}")
+    key = (64, 13)
+    print(f"# paper pool point R=64 I=13: jitted core "
+          f"{speedups[key]:.2f}x the numpy loop")
+
+
+if __name__ == "__main__":
+    main()

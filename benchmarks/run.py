@@ -11,9 +11,9 @@ import sys
 import time
 import traceback
 
-MODULES = ("predictors", "kernels_bench", "replay", "frontier",
-           "residual", "isolation", "batching", "budget", "tier_loss",
-           "ladder", "tails", "roofline")
+MODULES = ("predictors", "kernels_bench", "decision_core", "replay",
+           "frontier", "residual", "isolation", "batching", "budget",
+           "tier_loss", "ladder", "tails", "roofline")
 
 
 def main() -> None:

@@ -79,43 +79,27 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
-# JAX variant: the whole greedy pass as one lax.scan (jittable; used by the
-# benchmarks and validated against the numpy loop in tests).
+# JAX variant: delegates to the jitted full-parity decision core
+# (repro.core.decision_jax) — the whole greedy pass as one lax.scan,
+# sharing the Eq. 1 / dead-reckoning math with the numpy loop above.
 
 def greedy_assign_jax(order, q_hat_inst, c_hat, len_inst, tpot, d, b, free,
-                      max_batch, weights):
-    import jax
-    import jax.numpy as jnp
+                      max_batch, weights,
+                      allowed: Optional[np.ndarray] = None,
+                      latency_mode: str = "full",
+                      nominal_tpot: Optional[np.ndarray] = None):
+    from .decision_jax import greedy_core
 
-    wq, wl, wc = weights
-    order = jnp.asarray(order)
-    q_hat_inst = jnp.asarray(q_hat_inst, jnp.float32)
-    c_hat = jnp.asarray(c_hat, jnp.float32)
-    len_inst = jnp.asarray(len_inst, jnp.float32)
-    tpot = jnp.asarray(tpot, jnp.float32)
-    b0 = jnp.maximum(jnp.asarray(b, jnp.float32), 1.0)
-
-    def step(state, r):
-        d, b, free = state
-        wait = jnp.where(free > 0, 0.0, d / jnp.maximum(b, 1.0))
-        T = tpot * jnp.maximum(b / b0, 1.0) * (wait + len_inst[r])
-        cmax = jnp.maximum(c_hat[r].max(), 1e-12)
-        tmax = jnp.maximum(T.max(), 1e-12)
-        s = (wq * q_hat_inst[r] + wc * (1.0 - c_hat[r] / cmax)
-             + wl * (1.0 - T / tmax))
-        i = jnp.argmax(s)
-        d = d.at[i].add(len_inst[r, i])
-        dec = (free[i] > 0).astype(free.dtype)
-        free = free.at[i].add(-dec)
-        b = b.at[i].add(dec)
-        return (d, b, free), i
-
-    init = (jnp.asarray(d, jnp.float32), jnp.asarray(b, jnp.float32),
-            jnp.asarray(free, jnp.float32))
-    (_, _, _), choices = jax.lax.scan(
-        step, init, order)
-    inv = jnp.zeros_like(order).at[order].set(choices)
-    return inv
+    if allowed is None:
+        allowed = np.ones(np.shape(q_hat_inst), bool)
+    if nominal_tpot is None:
+        nominal_tpot = tpot
+    weights = tuple(float(w) for w in weights)
+    choice, _ = greedy_core(np.asarray(order), q_hat_inst, c_hat,
+                            len_inst, tpot, nominal_tpot, d, b, free,
+                            max_batch, weights, allowed,
+                            latency_mode=latency_mode)
+    return choice
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,38 @@
 """Equation 2 budget control: average-case admission filter at scoring
 time, worst-case enforcement at dispatch (max_tokens clamp) plus the
-engine's streaming early-stop (§4.1, §6.4)."""
+engine's streaming early-stop (§4.1, §6.4).
+
+`admission_math` is backend-agnostic (numpy or jax.numpy) so the numpy
+production path and the jitted decision core (`repro.core.decision_jax`)
+evaluate one shared definition of Eq. 2 — no fancy indexing, only
+where/argmin, so it traces under jit unchanged.
+"""
 from __future__ import annotations
 
 from typing import List, Optional, Tuple
 
 import numpy as np
+
+
+def cost_matrix(len_in, pred_len, price_in, price_out, xp=np):
+    """Ĉ(r,i) = (ℓ_in c_in + L̂ c_out) / 1e6 over (R, I)."""
+    return (len_in[:, None] * price_in[None, :]
+            + pred_len * price_out[None, :]) / 1e6
+
+
+def admission_math(budgets, len_in, pred_len, price_in, price_out, xp=np):
+    """Shared Eq. 2 body; see `admission_mask` for semantics. Returns
+    (allowed (R, I) bool, c_hat (R, I))."""
+    I = pred_len.shape[1]
+    c_hat = cost_matrix(len_in, pred_len, price_in, price_out, xp)
+    has_budget = ~xp.isnan(budgets)
+    constrained = xp.where(has_budget[:, None],
+                           c_hat <= budgets[:, None], True)
+    none_fit = ~constrained.any(axis=1)
+    cheapest = (xp.arange(I)[None, :]
+                == c_hat.argmin(axis=1)[:, None])   # one-hot fallback
+    allowed = xp.where(none_fit[:, None], cheapest, constrained)
+    return allowed, c_hat
 
 
 def admission_mask(budgets: np.ndarray, len_in: np.ndarray,
@@ -17,18 +44,8 @@ def admission_mask(budgets: np.ndarray, len_in: np.ndarray,
     Ĉ(r,i) = ℓ_in c_in + L̂ c_out <= b_r. Requests whose budget excludes
     every candidate keep their single cheapest candidate (the system still
     serves every request; §6.2)."""
-    R, I = pred_len.shape
-    c_hat = (len_in[:, None] * price_in[None, :]
-             + pred_len * price_out[None, :]) / 1e6
-    has_budget = ~np.isnan(budgets)
-    allowed = np.ones((R, I), bool)
-    constrained = np.where(has_budget[:, None],
-                           c_hat <= budgets[:, None], True)
-    none_fit = ~constrained.any(axis=1)
-    cheapest = c_hat.argmin(axis=1)
-    constrained[none_fit, :] = False
-    constrained[none_fit, cheapest[none_fit]] = True
-    return allowed & constrained, c_hat
+    return admission_math(budgets, len_in, pred_len, price_in, price_out,
+                          np)
 
 
 def max_tokens_clamp(budget: Optional[float], len_in: int,

@@ -136,11 +136,7 @@ class BestRouteRouter(Router):
         best = q.max(1, keepdims=True)
         spread = best - q.min(1, keepdims=True)
         ok = q >= best - (1.0 - self.t) * spread - 1e-12
-        # cheapest acceptable
-        out = np.zeros(emb.shape[0], np.int64)
-        for pos, r in enumerate(ok):
-            for m in self.price_order:
-                if r[m]:
-                    out[pos] = m
-                    break
-        return out
+        # cheapest acceptable: reorder the mask cheapest-first, argmax
+        # picks the first acceptable column (every row has one — the
+        # best model always passes its own threshold)
+        return self.price_order[ok[:, self.price_order].argmax(1)]

@@ -24,7 +24,8 @@ from repro.serving.request import Request
 from repro.serving.tiers import Tier
 
 from .assignment import greedy_assign, lpt_order
-from .budget import admission_mask, max_tokens_clamp
+from .budget import admission_mask, cost_matrix, max_tokens_clamp
+from .decision_jax import LATENCY_MODES
 from .weights import PRESETS, Weights, validate
 
 
@@ -41,6 +42,9 @@ class RBConfig:
     learned_tpot: bool = True
     knn_k: int = 10
     charge_compute: bool = True        # charge measured decision time
+    decision_backend: str = "numpy"    # numpy | jax (jitted decision core)
+    knn_backend: Optional[str] = None  # override bundle's KNN backend
+    #                                    (numpy | jax | pallas)
 
 
 class EstimatorBundle:
@@ -111,6 +115,18 @@ class RouteBalance:
                  tiers: Sequence[Tier]):
         self.cfg = cfg
         validate(cfg.weights)
+        assert cfg.decision_backend in ("numpy", "jax"), cfg.decision_backend
+        assert cfg.knn_backend in (None, "numpy", "jax", "pallas"), \
+            cfg.knn_backend
+        assert cfg.latency_mode in LATENCY_MODES, cfg.latency_mode
+        if (cfg.knn_backend is not None
+                and cfg.knn_backend != bundle.knn.backend):
+            # rebind the estimator feed (e.g. the Pallas knn_topk kernel)
+            # on a copy so a shared bundle is not mutated across schedulers
+            bundle = EstimatorBundle(bundle.encoder,
+                                     bundle.knn.with_backend(
+                                         cfg.knn_backend),
+                                     bundle.heads, bundle.model_names)
         self.bundle = bundle
         self.tiers = list(tiers)
         self.waiting: List[Request] = []
@@ -195,28 +211,34 @@ class RouteBalance:
                 tpot[idxs] = self.bundle.heads[tname].tpot_batch(
                     feats, learned=cfg.learned_tpot)
 
-        # 4. budget admission filter (Eq. 2)
+        # 4+5. budget admission (Eq. 2) + LPT-ordered greedy with dead
+        # reckoning — either the numpy loop or the jitted decision core
         price_in = np.array([ti.price_in for ti in tiers_of_i])
         price_out = np.array([ti.price_out for ti in tiers_of_i])
         budgets = np.array([np.nan if r.budget is None else r.budget
                             for r in batch])
         len_in = np.array([r.prompt.len_in for r in batch], float)
-        if cfg.budget_filter:
-            allowed, c_hat = admission_mask(budgets, len_in, l_inst,
-                                            price_in, price_out)
-        else:
-            allowed = np.ones((R, I), bool)
-            c_hat = (len_in[:, None] * price_in[None, :]
-                     + l_inst * price_out[None, :]) / 1e6
-
-        # 5. LPT-ordered greedy with dead reckoning
-        order = lpt_order(L.max(axis=1), enable=cfg.lpt)
         nominal = np.array([self.bundle.heads[ti.name].nominal_tpot
                             for ti in tiers_of_i])
-        choice, _ = greedy_assign(
-            order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
-            cfg.weights, allowed, latency_mode=cfg.latency_mode,
-            nominal_tpot=nominal)
+        if cfg.decision_backend == "jax":
+            from . import decision_jax
+            choice, _ = decision_jax.decide(
+                q_inst, l_inst, L.max(axis=1), tpot, nominal, d, b, free,
+                maxb, budgets, len_in, price_in, price_out, cfg.weights,
+                latency_mode=cfg.latency_mode, lpt=cfg.lpt,
+                budget_filter=cfg.budget_filter)
+        else:
+            if cfg.budget_filter:
+                allowed, c_hat = admission_mask(budgets, len_in, l_inst,
+                                                price_in, price_out)
+            else:
+                allowed = np.ones((R, I), bool)
+                c_hat = cost_matrix(len_in, l_inst, price_in, price_out)
+            order = lpt_order(L.max(axis=1), enable=cfg.lpt)
+            choice, _ = greedy_assign(
+                order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
+                cfg.weights, allowed, latency_mode=cfg.latency_mode,
+                nominal_tpot=nominal)
 
         # 6. dispatch + residual accounting
         compute = self._measured_compute if cfg.charge_compute else 0.0

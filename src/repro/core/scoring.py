@@ -1,12 +1,38 @@
 """Equation 1: the fused quality-latency-cost score over request-instance
 pairs, with per-request normalization of cost and latency by candidate
 maxima (the batch supplies the reference set a point-at-a-time router
-lacks; §4.1)."""
+lacks; §4.1).
+
+The math lives in one backend-agnostic function (`masked_score`) shared
+by the numpy production loop and the jitted JAX decision core
+(`repro.core.decision_jax`) — exact-parity differential tests depend on
+both backends evaluating the identical expression in the identical
+operation order.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
+
+
+def masked_score(q, c, t, weights, mask, xp=np):
+    """Eq. 1 over the trailing candidate axis, any leading batch shape.
+
+    q/c/t/mask broadcastable arrays whose last axis enumerates the
+    candidate instances; weights = (w_qual, w_lat, w_cost); xp is the
+    array namespace (numpy or jax.numpy). Cost and latency are
+    normalized per request by the max over *allowed* candidates;
+    disallowed pairs come back -inf.
+    """
+    wq, wl, wc = weights
+    neg = -xp.inf
+    cmax = xp.maximum(
+        xp.max(xp.where(mask, c, neg), axis=-1, keepdims=True), 1e-12)
+    tmax = xp.maximum(
+        xp.max(xp.where(mask, t, neg), axis=-1, keepdims=True), 1e-12)
+    s = wq * q + wc * (1.0 - c / cmax) + wl * (1.0 - t / tmax)
+    return xp.where(mask, s, neg)
 
 
 def score_matrix(q_hat: np.ndarray, c_hat: np.ndarray, t_hat: np.ndarray,
@@ -15,25 +41,13 @@ def score_matrix(q_hat: np.ndarray, c_hat: np.ndarray, t_hat: np.ndarray,
     """q_hat: (R, I) quality of instance's model per request in [0,1];
     c_hat, t_hat: (R, I) positive; weights = (w_qual, w_lat, w_cost).
     Returns (R, I) scores with disallowed pairs at -inf."""
-    wq, wl, wc = weights
     mask = np.ones(c_hat.shape, bool) if allowed is None else allowed
-    c = np.where(mask, c_hat, -np.inf)
-    t = np.where(mask, t_hat, -np.inf)
-    cmax = np.maximum(c.max(axis=1, keepdims=True), 1e-12)
-    tmax = np.maximum(t.max(axis=1, keepdims=True), 1e-12)
-    s = (wq * q_hat
-         + wc * (1.0 - c_hat / cmax)
-         + wl * (1.0 - t_hat / tmax))
-    return np.where(mask, s, -np.inf)
+    return masked_score(q_hat, c_hat, t_hat, weights, mask, np)
 
 
 def score_row(q: np.ndarray, c: np.ndarray, t: np.ndarray, weights,
               allowed: Optional[np.ndarray] = None) -> np.ndarray:
     """Single-request variant used inside the greedy loop (t is
     state-dependent so it is recomputed per dispatch)."""
-    wq, wl, wc = weights
     mask = np.ones(c.shape, bool) if allowed is None else allowed
-    cmax = max(float(np.max(np.where(mask, c, -np.inf))), 1e-12)
-    tmax = max(float(np.max(np.where(mask, t, -np.inf))), 1e-12)
-    s = wq * q + wc * (1.0 - c / cmax) + wl * (1.0 - t / tmax)
-    return np.where(mask, s, -np.inf)
+    return masked_score(q, c, t, weights, mask, np)

@@ -44,6 +44,15 @@ class KNNEstimator:
     def n_models(self) -> int:
         return self._quality.shape[1]
 
+    def with_backend(self, backend: str) -> "KNNEstimator":
+        """Copy sharing the fitted index but querying via `backend`
+        (the compiled-query cache is backend-specific, so it resets)."""
+        import copy
+        knn = copy.copy(self)
+        knn.backend = backend
+        knn._jq = None
+        return knn
+
     # -- query ----------------------------------------------------------------
     def query(self, q: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
         """q: (B, E) -> (quality (B, M), length (B, M))."""

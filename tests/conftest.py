@@ -13,3 +13,20 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_ctx():
+    """Trimmed serving workload: a small world + trained estimator
+    bundle shared by the fast tier-1 tests. The paper-scale module
+    fixtures (test_system's 1500-prompt world) stay where they are —
+    this one exists so hot-path tests don't pay that setup."""
+    from repro.core import EstimatorBundle
+    from repro.serving.tiers import paper_pool_tiers
+    from repro.serving.world import build_dataset, paper_world
+    world, names = paper_world(seed=0)
+    ds = build_dataset(world, n=400)
+    tiers = paper_pool_tiers()
+    bundle = EstimatorBundle.train(ds, tiers, names)
+    return dict(world=world, names=names, ds=ds, tiers=tiers,
+                bundle=bundle)

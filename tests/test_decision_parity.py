@@ -1,0 +1,166 @@
+"""Differential harness for the scheduler hot path: the numpy greedy
+loop vs the jitted JAX decision core must make the *same decisions*.
+
+Decision-level: exact assignment parity at fixed seeds across all four
+``latency_mode`` isolation arms x budget filter on/off x LPT on/off
+(the scan carries float32 state while numpy runs float64, so parity is
+exact away from argmax ties; the pinned seeds keep it deterministic).
+System-level: a full ``ClusterSim`` run under each backend lands on
+matching metrics, including with the Pallas ``knn_topk`` estimator feed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PRESETS, RBConfig, RouteBalance, make_requests, \
+    run_cell
+from repro.core import decision_jax
+from repro.core.assignment import greedy_assign, lpt_order
+from repro.core.budget import admission_mask
+from repro.serving.workload import poisson_arrivals
+
+MODES = ("full", "off_reactive", "off_predictive", "static_prior")
+WEIGHTS = (PRESETS["uniform"], (0.55, 0.25, 0.2), PRESETS["cost"])
+
+
+def _problem(seed, R=32, I=13):
+    rng = np.random.default_rng(seed)
+    return dict(
+        q=rng.uniform(0, 1, (R, I)),
+        ln=rng.uniform(20, 500, (R, I)),
+        plm=rng.uniform(20, 600, R),          # LPT key (max over models)
+        tpot=rng.uniform(0.005, 0.05, I),
+        nominal=rng.uniform(0.005, 0.05, I),
+        d=rng.uniform(0, 3000, I),
+        b=rng.integers(1, 12, I).astype(float),
+        free=rng.integers(0, 6, I).astype(float),
+        maxb=np.full(I, 16.0),
+        price_in=rng.uniform(0.05, 0.5, I),
+        price_out=rng.uniform(0.05, 0.5, I),
+        budgets=np.where(rng.uniform(size=R) < 0.5,
+                         rng.uniform(1e-5, 3e-4, R), np.nan),
+        len_in=rng.uniform(10, 500, R),
+    )
+
+
+def _numpy_decision(p, w, mode, budget_filter, lpt):
+    R, I = p["q"].shape
+    if budget_filter:
+        allowed, c_hat = admission_mask(p["budgets"], p["len_in"],
+                                        p["ln"], p["price_in"],
+                                        p["price_out"])
+    else:
+        allowed = np.ones((R, I), bool)
+        c_hat = (p["len_in"][:, None] * p["price_in"][None, :]
+                 + p["ln"] * p["price_out"][None, :]) / 1e6
+    order = lpt_order(p["plm"], enable=lpt)
+    return greedy_assign(order, p["q"], c_hat, p["ln"], p["tpot"],
+                         p["d"], p["b"], p["free"], p["maxb"], w,
+                         allowed, latency_mode=mode,
+                         nominal_tpot=p["nominal"])
+
+
+@pytest.mark.parametrize("lpt", [True, False], ids=["lpt", "fifo"])
+@pytest.mark.parametrize("budget_filter", [True, False],
+                         ids=["budget", "nobudget"])
+@pytest.mark.parametrize("mode", MODES)
+def test_exact_assignment_parity(mode, budget_filter, lpt):
+    for seed, w in enumerate(WEIGHTS):
+        p = _problem(seed)
+        ch_np, info = _numpy_decision(p, w, mode, budget_filter, lpt)
+        ch_jx, est = decision_jax.decide(
+            p["q"], p["ln"], p["plm"], p["tpot"], p["nominal"], p["d"],
+            p["b"], p["free"], p["maxb"], p["budgets"], p["len_in"],
+            p["price_in"], p["price_out"], w, latency_mode=mode,
+            lpt=lpt, budget_filter=budget_filter)
+        np.testing.assert_array_equal(ch_np, ch_jx)
+        np.testing.assert_allclose(est, info["est_latency"],
+                                   rtol=2e-4, atol=1e-7)
+
+
+def test_parity_with_batch_padding():
+    """decide() pads R to a power of two; pad rows must not leak into
+    real assignments (they scan strictly after every real request)."""
+    for R in (1, 5, 13, 33, 63):
+        p = _problem(7 + R, R=R)
+        w = PRESETS["uniform"]
+        ch_np, _ = _numpy_decision(p, w, "full", True, True)
+        ch_jx, _ = decision_jax.decide(
+            p["q"], p["ln"], p["plm"], p["tpot"], p["nominal"], p["d"],
+            p["b"], p["free"], p["maxb"], p["budgets"], p["len_in"],
+            p["price_in"], p["price_out"], w)
+        np.testing.assert_array_equal(ch_np, ch_jx)
+
+
+def test_greedy_core_respects_allowed():
+    p = _problem(42)
+    R, I = p["q"].shape
+    rng = np.random.default_rng(5)
+    allowed = rng.uniform(size=(R, I)) < 0.3
+    allowed[:, 2] = True
+    order = lpt_order(p["plm"])
+    c_hat = (p["len_in"][:, None] * p["price_in"][None, :]
+             + p["ln"] * p["price_out"][None, :]) / 1e6
+    choice, _ = decision_jax.greedy_core(
+        order, p["q"], c_hat, p["ln"], p["tpot"], p["nominal"], p["d"],
+        p["b"], p["free"], p["maxb"], PRESETS["uniform"], allowed)
+    choice = np.asarray(choice)
+    assert all(allowed[r, choice[r]] for r in range(R))
+
+
+def test_admission_math_numpy_vs_jax():
+    import jax.numpy as jnp
+    from repro.core.budget import admission_math
+    rng = np.random.default_rng(11)
+    R, I = 24, 13
+    budgets = np.where(rng.uniform(size=R) < 0.6,
+                       rng.uniform(1e-6, 1e-4, R), np.nan)
+    len_in = rng.uniform(10, 500, R)
+    pred = rng.uniform(10, 800, (R, I))
+    p_in = rng.uniform(0.01, 0.5, I)
+    p_out = rng.uniform(0.01, 0.5, I)
+    a_np, c_np = admission_math(budgets, len_in, pred, p_in, p_out, np)
+    a_jx, c_jx = admission_math(
+        jnp.asarray(budgets, jnp.float32), jnp.asarray(len_in, jnp.float32),
+        jnp.asarray(pred, jnp.float32), jnp.asarray(p_in, jnp.float32),
+        jnp.asarray(p_out, jnp.float32), jnp)
+    np.testing.assert_array_equal(a_np, np.asarray(a_jx))
+    np.testing.assert_allclose(c_np, np.asarray(c_jx), rtol=1e-5)
+
+
+# -- system level -----------------------------------------------------------
+
+def _run(ctx, cfg, n=80, lam=10.0, seed=3):
+    arr = poisson_arrivals(lam, n, seed=seed)
+    reqs = make_requests(ctx["ds"], "test", arr)
+    rb = RouteBalance(cfg, ctx["bundle"], ctx["tiers"])
+    return run_cell(rb, ctx["tiers"], ctx["names"], reqs)
+
+
+@pytest.mark.parametrize("mode", ["full", "off_reactive"])
+def test_e2e_cluster_metrics_parity(small_ctx, mode):
+    base = dict(charge_compute=False, latency_mode=mode)
+    m_np = _run(small_ctx, RBConfig(decision_backend="numpy", **base))
+    m_jx = _run(small_ctx, RBConfig(decision_backend="jax", **base))
+    assert abs(m_np["quality"] - m_jx["quality"]) < 0.01
+    assert m_jx["mean_e2e"] == pytest.approx(m_np["mean_e2e"], rel=0.05)
+    assert m_jx["cost_per_req"] == pytest.approx(m_np["cost_per_req"],
+                                                 rel=0.05)
+
+
+def test_e2e_pallas_knn_feed(small_ctx):
+    """The jitted core fed by the Pallas knn_topk estimator lands on the
+    same metrics as the jnp top_k feed."""
+    base = dict(charge_compute=False)
+    m_jnp = _run(small_ctx, RBConfig(decision_backend="jax", **base),
+                 n=40)
+    m_pal = _run(small_ctx, RBConfig(decision_backend="jax",
+                                     knn_backend="pallas", **base), n=40)
+    assert abs(m_jnp["quality"] - m_pal["quality"]) < 0.01
+    assert m_pal["mean_e2e"] == pytest.approx(m_jnp["mean_e2e"], rel=0.05)
+
+
+def test_knn_backend_override_does_not_mutate_bundle(small_ctx):
+    before = small_ctx["bundle"].knn.backend
+    RouteBalance(RBConfig(knn_backend="pallas"), small_ctx["bundle"],
+                 small_ctx["tiers"])
+    assert small_ctx["bundle"].knn.backend == before

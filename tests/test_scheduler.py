@@ -101,6 +101,33 @@ def test_budget_admission_and_clamp():
     assert 100 * 0.06 / 1e6 + mt * 0.06 / 1e6 <= 1e-5 + 0.06 / 1e6
 
 
+@pytest.mark.parametrize("threshold", [0.0, 0.35, 0.5, 1.0])
+def test_bestroute_vectorized_matches_loop(threshold):
+    """Regression pin: the one-argmax route() must reproduce the
+    original per-request double loop over the price order."""
+    from repro.core.routers import BestRouteRouter
+    rng = np.random.default_rng(17)
+    train = rng.normal(size=(300, 64)).astype(np.float32)
+    Q = rng.uniform(size=(300, 4))
+    L = rng.uniform(50, 500, (300, 4))
+    prices = np.array([0.06, 0.07, 0.15, 0.40])
+    br = BestRouteRouter(threshold=threshold).fit(train, Q, L, prices)
+    emb = rng.normal(size=(80, 64)).astype(np.float32)
+    got = br.route(emb)
+    # reference: the pre-vectorization implementation
+    q, _ = br._knn.query(emb)
+    best = q.max(1, keepdims=True)
+    spread = best - q.min(1, keepdims=True)
+    ok = q >= best - (1.0 - br.t) * spread - 1e-12
+    want = np.zeros(emb.shape[0], np.int64)
+    for pos, r in enumerate(ok):
+        for m in br.price_order:
+            if r[m]:
+                want[pos] = m
+                break
+    np.testing.assert_array_equal(got, want)
+
+
 def test_hungarian_optimality_small():
     rng = np.random.default_rng(3)
     for _ in range(5):

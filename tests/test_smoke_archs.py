@@ -10,6 +10,10 @@ from repro.configs import ARCHS, list_archs, smoke_variant
 from repro.models import Model
 from repro.training.data import batch_for
 
+# arch-zoo training smokes are the heaviest module in the suite (~2 min)
+# and independent of the scheduler hot path — slow tier (`-m slow`)
+pytestmark = pytest.mark.slow
+
 ALL = list_archs()
 
 

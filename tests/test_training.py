@@ -19,6 +19,7 @@ def tiny_model():
     return Model(cfg)
 
 
+@pytest.mark.slow
 def test_loss_decreases(tiny_model):
     data = TokenStream(256, 32, 8, seed=0)
     out = train(tiny_model, data, TrainConfig(n_steps=40, log_every=100),
@@ -27,6 +28,7 @@ def test_loss_decreases(tiny_model):
         (out["first_loss"], out["final_loss"])
 
 
+@pytest.mark.slow
 def test_checkpoint_resume_identical(tmp_path, tiny_model):
     data1 = TokenStream(256, 32, 8, seed=0)
     full = train(tiny_model, data1,
@@ -80,6 +82,7 @@ def test_gradient_compression_error_feedback():
     assert float(mets["compression_err_sq"]) >= 0
 
 
+@pytest.mark.slow
 def test_train_with_compression(tiny_model):
     data = TokenStream(256, 32, 8, seed=0)
     out = train(tiny_model, data,
@@ -89,6 +92,7 @@ def test_train_with_compression(tiny_model):
     assert out["final_loss"] < out["first_loss"] - 0.2
 
 
+@pytest.mark.slow
 def test_microbatched_train_step_matches(tiny_model):
     """Gradient accumulation must match the single-batch step on the
     first step (same math, k=2)."""
