@@ -49,8 +49,8 @@ def _price_of(names, tiers, model):
 
 
 def _embed_all(bundle, prompts, batch=512):
-    from repro.core.scheduler import _pad_tokens
-    toks = _pad_tokens([p.tokens for p in prompts], bundle.encoder.max_len)
+    from repro.estimators.embedding import pad_tokens
+    toks = pad_tokens([p.tokens for p in prompts], bundle.encoder.max_len)
     lens = np.array([min(len(p.tokens), bundle.encoder.max_len)
                      for p in prompts])
     out = []
@@ -94,5 +94,36 @@ def pipeline_cell(ctx, router, dispatcher, lam, *, deployment="serial",
     return m
 
 
+_ROWS: list = []        # rows accumulated since the last flush_json()
+
+
 def csv_row(name, us_per_call, derived):
     print(f"{name},{us_per_call:.1f},{derived}")
+    row = {"name": name, "us_per_call": float(us_per_call),
+           "derived": str(derived)}
+    # parse "k=v;k=v" derived strings into machine-readable fields
+    for part in str(derived).split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                row[k.strip()] = float(v.rstrip("x"))
+            except ValueError:
+                row[k.strip()] = v
+    _ROWS.append(row)
+
+
+def flush_json(module: str, path: str = None) -> str:
+    """Write the rows accumulated by `csv_row` to BENCH_<module>.json
+    (machine-readable perf trajectory) and reset the buffer."""
+    import json
+    path = path or f"BENCH_{module}.json"
+    rows, _ROWS[:] = list(_ROWS), []
+    with open(path, "w") as f:
+        json.dump({"module": module, "n_req_per_cell": N_REQ,
+                   "rows": rows}, f, indent=1)
+    print(f"# wrote {path} ({len(rows)} rows)")
+    return path
+
+
+def discard_rows():
+    _ROWS[:] = []

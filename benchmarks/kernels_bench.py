@@ -33,8 +33,8 @@ def main():
     prompts, Q, L = ctx["ds"].split("test")
     for B in (1, 16, 64):
         reqs = [prompts[i] for i in range(B)]
-        from repro.core.scheduler import _pad_tokens
-        toks = _pad_tokens([p.tokens for p in reqs], bundle.encoder.max_len)
+        from repro.estimators.embedding import pad_tokens
+        toks = pad_tokens([p.tokens for p in reqs], bundle.encoder.max_len)
         lens = np.array([min(len(p.tokens), 128) for p in reqs])
         dt_e = _time(lambda: bundle.encoder.encode(toks, lens))
         emb = bundle.encoder.encode(toks, lens)

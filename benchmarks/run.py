@@ -1,5 +1,7 @@
 """Benchmark harness entry point: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows
+machine-readably to ``BENCH_<module>.json`` (the accumulating perf
+trajectory).
 
   python -m benchmarks.run            # full suite
   python -m benchmarks.run frontier   # one module
@@ -11,9 +13,9 @@ import sys
 import time
 import traceback
 
-MODULES = ("predictors", "kernels_bench", "decision_core", "replay",
-           "frontier", "residual", "isolation", "batching", "budget",
-           "tier_loss", "ladder", "tails", "roofline")
+MODULES = ("predictors", "kernels_bench", "decision_core", "hotpath",
+           "replay", "frontier", "residual", "isolation", "batching",
+           "budget", "tier_loss", "ladder", "tails", "roofline")
 
 
 def main() -> None:
@@ -27,9 +29,13 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
+            from benchmarks import common
+            common.flush_json(name)
             print(f"### {name} done in {time.time()-t0:.0f}s")
         except Exception:
             failures.append(name)
+            from benchmarks import common
+            common.discard_rows()
             print(f"### {name} FAILED:\n{traceback.format_exc()[-2000:]}")
     if failures:
         print("\nFAILED MODULES:", failures)

@@ -19,11 +19,12 @@ def main():
         lost = rb_cell(ctx, w, 12.0,
                        fail_at={"time": 0.0, "instances": iids})
         rows.append((name, base, lost))
+        mix = "|".join(f"{k.split('/')[0].split('.')[-1]}:{v:.2f}"
+                       for k, v in lost["mix"].items())
         csv_row(f"tier_loss/{name}", 0.0,
                 f"q_base={base['quality']:.3f};q_lost={lost['quality']:.3f};"
                 f"failed={lost['failed']};e2e={lost['mean_e2e']:.2f};"
-                f"mix={'|'.join(f'{k.split(chr(47))[0].split(chr(46))[-1]}'
-                                f':{v:.2f}' for k, v in lost['mix'].items())}")
+                f"mix={mix}")
     # mid-run failure (availability event handling): kill after 20 s
     lost_mid = rb_cell(ctx, PRESETS["uniform"], 12.0,
                        fail_at={"time": 20.0, "instances": iids})

@@ -6,6 +6,7 @@ from .decision_jax import decide_batch as decide_batch_jax, \
 from .dispatchers import DISPATCHERS, RandomDispatch, RoundRobin, \
     ShortestQueue
 from .driver import make_requests, run_cell
+from .hotpath import FusedHotPath
 from .pipeline import PipelineConfig, PipelineScheduler
 from .routers import AvengersProRouter, BestRouteRouter, PassthroughRouter
 from .scheduler import EstimatorBundle, RBConfig, RouteBalance

@@ -20,17 +20,27 @@ def cost_matrix(len_in, pred_len, price_in, price_out, xp=np):
             + pred_len * price_out[None, :]) / 1e6
 
 
-def admission_math(budgets, len_in, pred_len, price_in, price_out, xp=np):
+def admission_math(budgets, len_in, pred_len, price_in, price_out, xp=np,
+                   valid=None):
     """Shared Eq. 2 body; see `admission_mask` for semantics. Returns
-    (allowed (R, I) bool, c_hat (R, I))."""
+    (allowed (R, I) bool, c_hat (R, I)).
+
+    `valid` (I,) bool optionally restricts the candidate set (the fused
+    hot path schedules over the full instance roster with dead instances
+    masked instead of recompiling after a failure): disallowed columns
+    never admit and never win the cheapest-candidate fallback."""
     I = pred_len.shape[1]
     c_hat = cost_matrix(len_in, pred_len, price_in, price_out, xp)
     has_budget = ~xp.isnan(budgets)
     constrained = xp.where(has_budget[:, None],
                            c_hat <= budgets[:, None], True)
+    c_sel = c_hat
+    if valid is not None:
+        constrained = constrained & valid[None, :]
+        c_sel = xp.where(valid[None, :], c_hat, xp.inf)
     none_fit = ~constrained.any(axis=1)
     cheapest = (xp.arange(I)[None, :]
-                == c_hat.argmin(axis=1)[:, None])   # one-hot fallback
+                == c_sel.argmin(axis=1)[:, None])   # one-hot fallback
     allowed = xp.where(none_fit[:, None], cheapest, constrained)
     return allowed, c_hat
 

@@ -43,13 +43,28 @@ from .scoring import masked_score
 LATENCY_MODES = ("full", "off_reactive", "off_predictive", "static_prior")
 
 
+def bucket_pow2(n: int, lo: int = 8) -> int:
+    """Round a dynamic size up to the next power of two (floor `lo`) so
+    jitted programs compile O(log) shape variants instead of one per
+    size."""
+    return max(lo, 1 << max(int(n) - 1, 0).bit_length())
+
+
 def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
                  d, b, free, max_batch, weights, allowed,
-                 latency_mode: str):
+                 latency_mode: str, row_valid=None):
     """Traced body shared by both entry points. Mirrors
-    ``assignment.greedy_assign`` operation-for-operation."""
+    ``assignment.greedy_assign`` operation-for-operation.
+
+    ``row_valid`` (R,) optionally marks shape-padding rows: invalid rows
+    still pick (their choices are dropped by the caller) but apply NO
+    dead-reckoning update, so callers that carry the post-scan state
+    across batches (the fused hot path) don't accumulate phantom load.
+    Defaults to all-valid, which is bitwise the original behavior."""
     wq, wl, wc = weights
     b0 = jnp.maximum(b, 1.0)            # snapshot batch (TPOT reference)
+    if row_valid is None:
+        row_valid = jnp.ones(q_inst.shape[0], bool)
 
     def step(state, r):
         d, b, free = state
@@ -77,8 +92,9 @@ def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
             i = jnp.argmax(s)
         est = T[i]
         # dead reckoning: the chosen instance's pending work grows by L̂
-        d = d.at[i].add(l_inst[r, i])
-        has_free = free[i] > 0
+        v = row_valid[r]
+        d = d.at[i].add(jnp.where(v, l_inst[r, i], 0.0))
+        has_free = (free[i] > 0) & v
         dec = jnp.where(has_free, 1.0, 0.0)
         free = free.at[i].add(-dec)
         b = b.at[i].set(jnp.where(has_free,
@@ -165,7 +181,7 @@ def decide(q_inst: np.ndarray, l_inst: np.ndarray,
     affect later (i.e. other pad) steps — and their choices are dropped.
     """
     R = q_inst.shape[0]
-    Rp = max(8, 1 << (R - 1).bit_length())
+    Rp = bucket_pow2(R)
     if Rp != R:
         pad = Rp - R
         q_inst = np.pad(np.asarray(q_inst, float), ((0, pad), (0, 0)))

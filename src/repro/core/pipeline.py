@@ -25,7 +25,9 @@ from repro.serving.tiers import Tier
 from .budget import max_tokens_clamp
 from .dispatchers import Dispatcher
 from .routers import Router
-from .scheduler import EstimatorBundle, _pad_tokens
+from repro.estimators.embedding import pad_tokens
+
+from .scheduler import EstimatorBundle
 
 
 @dataclasses.dataclass
@@ -95,8 +97,8 @@ class PipelineScheduler:
 
     def _scored(self, group: List[Request], t: float):
         self.busy_servers -= 1
-        toks = _pad_tokens([r.prompt.tokens for r in group],
-                           self.bundle.encoder.max_len)
+        toks = pad_tokens([r.prompt.tokens for r in group],
+                          self.bundle.encoder.max_len)
         lens = np.array([min(len(r.prompt.tokens),
                              self.bundle.encoder.max_len) for r in group])
         emb = self.bundle.encoder.encode(toks, lens)

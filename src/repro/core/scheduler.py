@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.estimators.embedding import SentenceEncoder
+from repro.estimators.embedding import SentenceEncoder, pad_tokens
 from repro.estimators.knn import KNNEstimator
 from repro.estimators.latency import LatencyHead, tpot_features
 from repro.serving.cluster import ClusterSim, Instance
@@ -42,9 +42,13 @@ class RBConfig:
     learned_tpot: bool = True
     knn_k: int = 10
     charge_compute: bool = True        # charge measured decision time
-    decision_backend: str = "numpy"    # numpy | jax (jitted decision core)
+    decision_backend: str = "jax"      # numpy (reference loop) |
+    #                                    jax (jitted decision core) |
+    #                                    fused (single-dispatch hot path)
     knn_backend: Optional[str] = None  # override bundle's KNN backend
-    #                                    (numpy | jax | pallas)
+    #                                    (numpy | jax | pallas); staged
+    #                                    backends only — fused has the
+    #                                    estimator feed in-graph
 
 
 class EstimatorBundle:
@@ -63,7 +67,7 @@ class EstimatorBundle:
               seed: int = 0) -> "EstimatorBundle":
         enc = SentenceEncoder(seed=7)
         prompts, Q, L = dataset.split("train")
-        toks = _pad_tokens([p.tokens for p in prompts], enc.max_len)
+        toks = pad_tokens([p.tokens for p in prompts], enc.max_len)
         lens = np.array([min(len(p.tokens), enc.max_len) for p in prompts])
         emb = []
         for i in range(0, len(prompts), 512):
@@ -80,20 +84,12 @@ class EstimatorBundle:
 
     def predict_prompts(self, reqs: Sequence[Request]
                         ) -> Tuple[np.ndarray, np.ndarray]:
-        toks = _pad_tokens([r.prompt.tokens for r in reqs],
-                           self.encoder.max_len)
+        toks = pad_tokens([r.prompt.tokens for r in reqs],
+                          self.encoder.max_len)
         lens = np.array([min(len(r.prompt.tokens), self.encoder.max_len)
                          for r in reqs])
         emb = self.encoder.encode(toks, lens)
         return self.knn.query(emb)
-
-
-def _pad_tokens(token_lists, max_len: int) -> np.ndarray:
-    out = np.zeros((len(token_lists), max_len), np.int32)
-    for i, t in enumerate(token_lists):
-        n = min(len(t), max_len)
-        out[i, :n] = t[:n]
-    return out
 
 
 def _tier_sweep(tier: Tier, rng) -> Tuple[np.ndarray, np.ndarray]:
@@ -115,7 +111,8 @@ class RouteBalance:
                  tiers: Sequence[Tier]):
         self.cfg = cfg
         validate(cfg.weights)
-        assert cfg.decision_backend in ("numpy", "jax"), cfg.decision_backend
+        assert cfg.decision_backend in ("numpy", "jax", "fused"), \
+            cfg.decision_backend
         assert cfg.knn_backend in (None, "numpy", "jax", "pallas"), \
             cfg.knn_backend
         assert cfg.latency_mode in LATENCY_MODES, cfg.latency_mode
@@ -136,10 +133,12 @@ class RouteBalance:
         self.batches = 0
         self.expected: Optional[int] = None   # stop firing once all served
         self.compute_log: List[Tuple[int, float]] = []
+        self._fused = None                    # lazily-built FusedHotPath
 
     # -- wiring ---------------------------------------------------------------
     def attach(self, sim: ClusterSim):
         self.sim = sim
+        self._fused = None                    # new sim -> new roster
         sim.push(self.cfg.base_window, self._fire)
 
     def enqueue(self, req: Request, t: float):
@@ -149,10 +148,11 @@ class RouteBalance:
     def _window(self) -> float:
         if not self.cfg.adaptive:
             return self.cfg.base_window
-        inst = self.sim.alive_instances()
-        busy = np.mean([min(i.snapshot["batch_size"]
-                            / max(i.tier.max_batch, 1), 1.0)
-                        for i in inst]) if inst else 0.0
+        tel = self.sim.tel
+        alive = tel.alive
+        busy = float(np.mean(np.minimum(
+            tel.batch[alive] / np.maximum(tel.max_batch[alive], 1.0),
+            1.0))) if alive.any() else 0.0
         return float(np.clip(self.cfg.base_window * (0.4 + 1.8 * busy),
                              0.04, 0.30))
 
@@ -173,12 +173,33 @@ class RouteBalance:
             return                          # all requests dispatched
         self.sim.push(t + self._window(), self._fire)
 
-    def _decide(self, batch: List[Request], t: float):
+    def _decide_core(self, batch: List[Request]
+                     ) -> Tuple[List[Instance], np.ndarray, np.ndarray]:
+        """The pure per-batch decision (no dispatch): returns the
+        candidate roster plus (choice (R,) indices into it, l_chosen
+        (R,) predicted length at the chosen instance). This is the hot
+        path `benchmarks/hotpath.py` measures."""
+        if self.cfg.decision_backend == "fused":
+            return self._decide_fused(batch)
+        return self._decide_staged(batch)
+
+    def _decide_fused(self, batch: List[Request]):
+        """Single-dispatch path: one jitted device program per batch
+        over the full instance roster (dead instances masked)."""
+        if not self.sim.tel.alive.any():
+            raise RuntimeError("no alive instances to schedule onto")
+        if self._fused is None:
+            from .hotpath import FusedHotPath
+            self._fused = FusedHotPath.for_bundle(
+                self.bundle, self.sim.instances, self.cfg)
+        choice, l_chosen = self._fused.decide(batch, self.sim.tel)
+        return self.sim.instances, choice, l_chosen
+
+    def _decide_staged(self, batch: List[Request]):
         cfg = self.cfg
         instances = self.sim.alive_instances()
         I = len(instances)
         R = len(batch)
-        model_names = self.bundle.model_names
         m_of_i = np.array([inst.model_idx for inst in instances])
         tiers_of_i = [inst.tier for inst in instances]
 
@@ -187,14 +208,14 @@ class RouteBalance:
         q_inst = Q[:, m_of_i]                            # (R, I)
         l_inst = L[:, m_of_i]
 
-        # 2. telemetry seed (non-blocking snapshots)
-        tel = [inst.telemetry() for inst in instances]
-        d = np.array([s["pending_decode"] for s in tel])
-        b = np.array([max(s["batch_size"], 1) for s in tel])
-        free = np.array([s["free_slots"] for s in tel], float)
-        ctx = np.array([max(s["mean_ctx"], 64.0) for s in tel])
-        maxb = np.array([inst.tier.max_batch for inst in instances],
-                        float)
+        # 2. telemetry seed from the columnar view (non-blocking)
+        tel = self.sim.tel
+        rows = np.flatnonzero(tel.alive)
+        d = tel.pending[rows].copy()
+        b = np.maximum(tel.batch[rows], 1.0)
+        free = tel.free[rows].copy()
+        ctx = np.maximum(tel.ctx[rows], 64.0)
+        maxb = tel.max_batch[rows].copy()
 
         # 3. one TPOT-head call per TIER (not per instance)
         tpot = np.zeros(I)
@@ -239,6 +260,14 @@ class RouteBalance:
                 order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
                 cfg.weights, allowed, latency_mode=cfg.latency_mode,
                 nominal_tpot=nominal)
+        l_chosen = l_inst[np.arange(R), choice]
+        return instances, choice, l_chosen
+
+    def _decide(self, batch: List[Request], t: float):
+        cfg = self.cfg
+        instances, choice, l_chosen = self._decide_core(batch)
+        R = len(batch)
+        I = int(self.sim.tel.alive.sum())
 
         # 6. dispatch + residual accounting
         compute = self._measured_compute if cfg.charge_compute else 0.0
@@ -253,6 +282,6 @@ class RouteBalance:
             req.sched_batch_wait = max(t - req.arrival, 0.0)
             mt = max_tokens_clamp(req.budget, req.prompt.len_in,
                                   inst.tier.price_in, inst.tier.price_out)
-            inst.submit(req, now, float(l_inst[r_idx, i]), mt)
+            inst.submit(req, now, float(l_chosen[r_idx]), mt)
             self.decisions += 1
         self.batches += 1

@@ -20,6 +20,28 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def pad_tokens(token_lists, max_len: int) -> np.ndarray:
+    """Ragged token lists -> (B, max_len) int32, zero-padded.
+
+    Runs on the scheduler hot path once per batch, so the per-token work
+    is one boolean-mask scatter (row-major mask order matches the
+    concatenation order) instead of a Python loop over rows.
+    """
+    n = len(token_lists)
+    out = np.zeros((n, max_len), np.int32)
+    if n == 0:
+        return out
+    lens = np.minimum(
+        np.fromiter((len(t) for t in token_lists), np.int64, count=n),
+        max_len)
+    if lens.sum() == 0:
+        return out
+    mask = np.arange(max_len)[None, :] < lens[:, None]
+    out[mask] = np.concatenate(
+        [np.asarray(t[:l], np.int32) for t, l in zip(token_lists, lens)])
+    return out
+
+
 class SentenceEncoder:
     def __init__(self, dim: int = 128, hidden: int = 128, n_layers: int = 2,
                  n_heads: int = 4, hash_vocab: int = 4096, seed: int = 7,

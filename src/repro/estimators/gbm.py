@@ -22,14 +22,19 @@ class _Tree:
     leaf: np.ndarray         # (n_leaves,)  float32
     depth: int
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
+    def leaves(self, X: np.ndarray) -> np.ndarray:
+        """(n,) leaf index per row — the exact traversal result, used by
+        the packed-parity tests."""
         idx = np.zeros(X.shape[0], np.int64)
         for _ in range(self.depth):
             f = self.feature[idx]
             t = self.threshold[idx]
             go_right = X[np.arange(X.shape[0]), f] > t
             idx = 2 * idx + 1 + go_right
-        return self.leaf[idx - (2 ** self.depth - 1)]
+        return idx - (2 ** self.depth - 1)
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return self.leaf[self.leaves(X)]
 
 
 def _fit_tree(X, g, depth: int, n_bins: int, min_child: int,
@@ -132,6 +137,12 @@ class GradientBoostedRegressor:
             out += self.lr * t.predict(X)
         return out
 
+    def leaf_indices(self, X: np.ndarray) -> np.ndarray:
+        """(T, n) leaf index per (tree, row) — numpy reference for the
+        packed traversal."""
+        X = np.asarray(X, np.float32)
+        return np.stack([t.leaves(X) for t in self.trees])
+
     # -- packed arrays for in-graph (jnp) inference -------------------------
     def pack(self):
         feat = np.stack([t.feature for t in self.trees])
@@ -141,25 +152,95 @@ class GradientBoostedRegressor:
                 "base": self.base, "lr": self.lr, "depth": self.depth}
 
 
-def predict_packed(packed, X):
+def _packed_leaves(feat, thr, X, depth):
+    """Shared packed traversal: one gather per depth level over all trees
+    at once. feat/thr: (..., T, n_internal); X: matching (..., n, f);
+    returns leaf idx (..., T, n)."""
+    import jax.numpy as jnp
+    idx = jnp.zeros(feat.shape[:-1] + (X.shape[-2],), jnp.int32)
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, idx, axis=-1)     # (..., T, n)
+        t = jnp.take_along_axis(thr, idx, axis=-1)      # (..., T, n)
+        # gather each row's split feature value: X[..., row, f]
+        xv = jnp.take_along_axis(
+            jnp.swapaxes(X, -1, -2)[..., None, :, :],   # (..., 1, f, n)
+            f[..., None, :], axis=-2)[..., 0, :]        # (..., T, n)
+        idx = 2 * idx + 1 + (xv > t).astype(jnp.int32)
+    return idx - (2 ** depth - 1)
+
+
+def _accumulate(base, lr, vals, xp):
+    """base + sum_j lr * vals[..., j, :] accumulated tree-by-tree in
+    float32 — the same rounding order as the numpy ensemble loop in
+    `GradientBoostedRegressor.predict`, so packed inference is exactly
+    (bitwise) the numpy prediction. The ONE definition of that rounding
+    order: both packed entry points route through here. base may be a
+    scalar or an array broadcastable to the output."""
+    out = (xp.zeros(vals.shape[:-2] + vals.shape[-1:], np.float32)
+           + xp.asarray(base, np.float32))
+    for j in range(vals.shape[-2]):
+        out = out + lr * vals[..., j, :]
+    return out
+
+
+def predict_packed(packed, X, return_leaves: bool = False):
     """jnp inference over packed trees, vectorized across trees.
 
-    X: (n, f) -> (n,). One gather per depth level over all T trees at once.
+    X: (n, f) -> (n,). One gather per depth level over all T trees at
+    once; the per-tree accumulation mirrors the numpy loop bitwise.
     """
     import jax.numpy as jnp
     feat, thr, leaf = (jnp.asarray(packed["feature"]),
                        jnp.asarray(packed["threshold"]),
                        jnp.asarray(packed["leaf"]))
-    n = X.shape[0]
-    T = feat.shape[0]
-    idx = jnp.zeros((T, n), jnp.int32)
-    for _ in range(packed["depth"]):
-        f = jnp.take_along_axis(feat, idx, axis=1)      # (T, n)
-        t = jnp.take_along_axis(thr, idx, axis=1)       # (T, n)
-        xv = jnp.take_along_axis(X[None, :, :].repeat(T, axis=0),
-                                 f[:, :, None].astype(jnp.int32),
-                                 axis=2)[:, :, 0]       # (T, n)
+    X = jnp.asarray(X, jnp.float32)
+    leaf_idx = _packed_leaves(feat, thr, X, packed["depth"])     # (T, n)
+    vals = jnp.take_along_axis(leaf, leaf_idx, axis=1)           # (T, n)
+    out = _accumulate(packed["base"], packed["lr"], vals, jnp)
+    if return_leaves:
+        return out, leaf_idx
+    return out
+
+
+def pack_ensemble(models: List["GradientBoostedRegressor"]):
+    """Stack several same-shape boosters into one packed dict with a
+    leading member axis — e.g. the per-tier TPOT heads fused into one
+    device-resident gather for the single-dispatch hot path."""
+    packs = [m.pack() for m in models]
+    assert len({p["depth"] for p in packs}) == 1, "depth mismatch"
+    assert len({p["lr"] for p in packs}) == 1, "learning-rate mismatch"
+    assert len({p["feature"].shape for p in packs}) == 1, "tree-count mismatch"
+    return {"feature": np.stack([p["feature"] for p in packs]),
+            "threshold": np.stack([p["threshold"] for p in packs]),
+            "leaf": np.stack([p["leaf"] for p in packs]),
+            "base": np.array([p["base"] for p in packs], np.float32),
+            "lr": packs[0]["lr"], "depth": packs[0]["depth"]}
+
+
+def predict_packed_gathered(stacked, member, X):
+    """Per-row member selection over a `pack_ensemble` stack (in-graph).
+
+    member: (n,) int — which booster scores each row; X: (n, f).
+    Returns (n,). Each row walks its own member's trees; used by the
+    fused hot path to run all per-tier TPOT heads in one dispatch.
+    The traversal gather is diagonal (row r vs row r's trees), unlike
+    `_packed_leaves`' cross product (every row vs every tree), but the
+    parity-critical accumulation shares `_accumulate`.
+    """
+    import jax.numpy as jnp
+    feat = jnp.asarray(stacked["feature"])[member]      # (n, T, n_int)
+    thr = jnp.asarray(stacked["threshold"])[member]
+    leaf = jnp.asarray(stacked["leaf"])[member]
+    X = jnp.asarray(X, jnp.float32)
+    T = feat.shape[1]
+    idx = jnp.zeros((X.shape[0], T), jnp.int32)
+    for _ in range(stacked["depth"]):
+        f = jnp.take_along_axis(feat, idx[:, :, None], axis=2)[..., 0]
+        t = jnp.take_along_axis(thr, idx[:, :, None], axis=2)[..., 0]
+        xv = jnp.take_along_axis(X, f, axis=1)          # (n, T)
         idx = 2 * idx + 1 + (xv > t).astype(jnp.int32)
-    leaf_idx = idx - (2 ** packed["depth"] - 1)
-    vals = jnp.take_along_axis(leaf, leaf_idx, axis=1)  # (T, n)
-    return packed["base"] + packed["lr"] * vals.sum(axis=0)
+    leaf_idx = idx - (2 ** stacked["depth"] - 1)
+    vals = jnp.take_along_axis(leaf, leaf_idx[:, :, None],
+                               axis=2)[..., 0]          # (n, T)
+    base = jnp.asarray(stacked["base"])[member]
+    return _accumulate(base, stacked["lr"], vals.T, jnp)

@@ -19,6 +19,31 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 
+def distance_weights(d2, eps: float, xp=np):
+    """Inverse-distance weights over the k neighbors, normalized to sum
+    to 1 along the trailing axis. The one definition shared by the
+    numpy / jax / pallas backends and the fused hot path
+    (`repro.core.hotpath`)."""
+    w = 1.0 / (xp.sqrt(xp.maximum(d2, 0.0)) + eps)
+    return w / w.sum(-1, keepdims=True)
+
+
+def topk_soft_lookup(q, x, xsq, quality, length, k: int, eps: float):
+    """The jnp KNN query body: squared distances via the
+    ||q-x||² = ||q||² - 2 q·x + ||x||² expansion, `lax.top_k`, then the
+    distance-weighted label mix. One definition traced by both the
+    staged jax backend and the fused hot path (exact-parity tests
+    compare their outputs bitwise). All args are jnp arrays; returns
+    (quality (B, M), length (B, M))."""
+    import jax
+    import jax.numpy as jnp
+    d2 = xsq[None, :] - 2.0 * q @ x.T + jnp.sum(q * q, -1, keepdims=True)
+    neg, idx = jax.lax.top_k(-d2, k)
+    w = distance_weights(-neg, eps, jnp)
+    return ((quality[idx] * w[..., None]).sum(1),
+            (length[idx] * w[..., None]).sum(1))
+
+
 class KNNEstimator:
     def __init__(self, k: int = 10, backend: str = "jax",
                  eps: float = 1e-6):
@@ -62,11 +87,6 @@ class KNNEstimator:
             return self._query_pallas(q)
         return self._query_np(q)
 
-    def _weights(self, d2, idx):
-        w = 1.0 / (np.sqrt(np.maximum(d2, 0.0)) + self.eps)
-        w = w / w.sum(-1, keepdims=True)
-        return w
-
     def _query_np(self, q):
         q = np.asarray(q, np.float32)
         d2 = self._sq[None, :] - 2.0 * q @ self._x.T \
@@ -76,7 +96,7 @@ class KNNEstimator:
         order = np.argsort(d2k, axis=1)
         idx = np.take_along_axis(idx, order, axis=1)
         d2k = np.take_along_axis(d2k, order, axis=1)
-        w = self._weights(d2k, idx)
+        w = distance_weights(d2k, self.eps)
         qual = (self._quality[idx] * w[..., None]).sum(1)
         leng = (self._length[idx] * w[..., None]).sum(1)
         return qual, leng
@@ -92,14 +112,7 @@ class KNNEstimator:
 
         @jax.jit
         def run(q):
-            d2 = sq[None, :] - 2.0 * q @ x.T \
-                + jnp.sum(q * q, -1, keepdims=True)
-            neg, idx = jax.lax.top_k(-d2, k)
-            d2k = -neg
-            w = 1.0 / (jnp.sqrt(jnp.maximum(d2k, 0.0)) + eps)
-            w = w / w.sum(-1, keepdims=True)
-            return ((qual[idx] * w[..., None]).sum(1),
-                    (leng[idx] * w[..., None]).sum(1))
+            return topk_soft_lookup(q, x, sq, qual, leng, k, eps)
         return run
 
     def _query_jax(self, q):

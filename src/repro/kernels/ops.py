@@ -45,11 +45,12 @@ def build_query(x: np.ndarray, quality: np.ndarray, lengths: np.ndarray,
     qualj = jnp.asarray(quality, jnp.float32)
     lenj = jnp.asarray(lengths, jnp.float32)
 
+    from repro.estimators.knn import distance_weights
+
     @jax.jit
     def run(q):
         d2, idx = knn_topk_kernel(q, xj, k=k, interpret=INTERPRET)
-        w = 1.0 / (jnp.sqrt(jnp.maximum(d2, 0.0)) + eps)
-        w = w / w.sum(-1, keepdims=True)
+        w = distance_weights(d2, eps, jnp)
         return ((qualj[idx] * w[..., None]).sum(1),
                 (lenj[idx] * w[..., None]).sum(1))
     return run

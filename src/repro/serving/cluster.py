@@ -34,12 +34,53 @@ class _Seq:
     ctx: int = 0                # prompt + generated
 
 
+class TelemetryArrays:
+    """Structure-of-arrays telemetry over the full instance roster.
+
+    The dict snapshots (`Instance.snapshot`) are the worker-side cache
+    the paper describes; this is the scheduler-side columnar view of the
+    same numbers, written in place at iteration boundaries so the hot
+    path reads (I,) arrays instead of marshalling one dict per instance
+    per batch. `version` bumps on every write — the fused hot path uses
+    it to decide whether its device-resident dead-reckoned state must be
+    refreshed or can be carried forward.
+    """
+
+    def __init__(self, instances: List["Instance"]):
+        I = len(instances)
+        self.pending = np.zeros(I)                  # pending decode tokens
+        self.batch = np.zeros(I)                    # decode batch size
+        self.free = np.array([i.tier.max_batch for i in instances], float)
+        self.ctx = np.zeros(I)                      # mean context length
+        self.queue = np.zeros(I)                    # queue depth
+        self.t = np.zeros(I)                        # snapshot timestamp
+        self.max_batch = np.array([i.tier.max_batch for i in instances],
+                                  float)
+        self.alive = np.ones(I, bool)
+        self.version = 0
+
+    def write(self, slot: int, pending: float, batch: int, free: int,
+              ctx: float, queue: int, t: float):
+        self.pending[slot] = pending
+        self.batch[slot] = batch
+        self.free[slot] = free
+        self.ctx[slot] = ctx
+        self.queue[slot] = queue
+        self.t[slot] = t
+        self.version += 1
+
+    def kill(self, slot: int):
+        self.alive[slot] = False
+        self.version += 1
+
+
 class Instance:
     def __init__(self, iid: str, tier: Tier, model_idx: int, sim: "ClusterSim"):
         self.iid = iid
         self.tier = tier
         self.model_idx = model_idx
         self.sim = sim
+        self.slot = 0               # row in ClusterSim.tel (set by the sim)
         self.queue: List[Tuple[Request, float]] = []   # (req, pred_len)
         self.running: List[_Seq] = []
         self.iter_scheduled = False
@@ -129,6 +170,11 @@ class Instance:
                          / max(len(self.running), 1)),
             "t": t + dt,
         }
+        self.sim.tel.write(self.slot, self.snapshot["pending_decode"],
+                           self.snapshot["batch_size"],
+                           self.snapshot["free_slots"],
+                           self.snapshot["mean_ctx"],
+                           self.snapshot["queue_depth"], t + dt)
         if self.running or self.queue:
             self.sim.push(t + dt, self._iterate)
             self.iter_scheduled = True
@@ -136,6 +182,7 @@ class Instance:
     def fail(self):
         """Node failure: mark dead; running + queued requests fail."""
         self.alive = False
+        self.sim.tel.kill(self.slot)
         for s in self.running:
             s.req.failed = True
             self.sim.completed.append(s.req)
@@ -160,6 +207,9 @@ class ClusterSim:
                 self.instances.append(
                     Instance(f"{tier.name}#{j}", tier, midx, self))
         self.by_id = {i.iid: i for i in self.instances}
+        for slot, inst in enumerate(self.instances):
+            inst.slot = slot
+        self.tel = TelemetryArrays(self.instances)
         self.completed: List[Request] = []
         self._events: List = []
         self._counter = itertools.count()
