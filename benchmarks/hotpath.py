@@ -57,16 +57,12 @@ def _bench_cell(ctx, R, I, reps):
         r.budget = None if np.isnan(b) else float(b)
     rbs = {}
     picks = {}
+    from repro.serving.scenarios import randomize_telemetry
     for be in BACKENDS:
-        sim = ClusterSim(tiers, ctx["names"], seed=0)
+        # same load per backend (seeded shared fixture)
+        sim = randomize_telemetry(ClusterSim(tiers, ctx["names"], seed=0),
+                                  seed=1)
         tel = sim.tel
-        nI = len(sim.instances)
-        state_rng = np.random.default_rng(1)    # same load per backend
-        tel.pending[:] = state_rng.uniform(0, 3000, nI)
-        tel.batch[:] = state_rng.integers(0, 12, nI)
-        tel.free[:] = state_rng.integers(0, 6, nI)
-        tel.ctx[:] = state_rng.uniform(64, 2048, nI)
-        tel.version += 1
         rb = RouteBalance(RBConfig(decision_backend=be), ctx["bundle"],
                           tiers)
         rb.sim = sim

@@ -14,8 +14,9 @@ import time
 import traceback
 
 MODULES = ("predictors", "kernels_bench", "decision_core", "hotpath",
-           "replay", "frontier", "residual", "isolation", "batching",
-           "budget", "tier_loss", "ladder", "tails", "roofline")
+           "sweep", "replay", "frontier", "residual", "isolation",
+           "batching", "budget", "tier_loss", "ladder", "tails",
+           "roofline")
 
 
 def main() -> None:

@@ -1,0 +1,114 @@
+"""Cluster-scale frontier sweep on the fused backend: (weight vector x
+arrival rate x scenario) — the repo's reproduction of the paper's
+three-way quality-cost-throughput frontier and its high-load separation
+plots (§6.2/§6.5), run on worlds from `repro.serving.scenarios`.
+
+Each cell is a full `ClusterSim` run under
+``RBConfig(decision_backend="fused")``: one scenario (roster + composite
+workload + perturbation schedule), one weight preset, one load multiple
+of the scenario's nominal rate. Rows carry p50/p99 end-to-end latency,
+per-request cost, measured decision time, goodput (SLO-bounded
+throughput) and a per-weight-config parity probe — ``parity`` is
+fused-vs-staged-jax agreement (bitwise-guaranteed, gated at 1.0 in CI)
+and ``parity_np`` is fused-vs-numpy (informational: float64-vs-float32
+argmax near-ties can flip same-tier replicas) — landing in
+``BENCH_sweep.json`` via benchmarks.run.
+
+Smoke mode for CI: REPRO_SWEEP_SMOKE=1 trims the grid (small rosters,
+low n) to under a couple of minutes while keeping the full
+3-weights x 3-loads x 2-scenarios shape so the artifact schema stays
+pinned.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .common import N_REQ, csv_row
+from repro.core import PRESETS, RBConfig, RouteBalance
+from repro.serving.cluster import ClusterSim
+from repro.serving.scenarios import get_scenario, randomize_telemetry
+
+SMOKE = os.environ.get("REPRO_SWEEP_SMOKE", "") not in ("", "0")
+WEIGHTS = (("quality", PRESETS["quality"]),
+           ("uniform", PRESETS["uniform"]),
+           ("cost", PRESETS["cost"]))
+LOADS = (0.5, 1.0, 2.0)            # multiples of the scenario's rate
+SCENES = ("paper", "multitenant") if SMOKE else ("paper", "cluster")
+N_CELL = 48 if SMOKE else N_REQ
+DATASET_N = 300 if SMOKE else 1500
+
+
+def _parity_probe(run, bundle, weights, R=16, seed=7):
+    """Probe batch under THIS cell's weight vector on a randomly-loaded
+    roster. Returns (fused-vs-staged-jax agreement — bitwise-guaranteed,
+    the CI gate; fused-vs-numpy agreement — informational, subject to
+    the float32-vs-float64 argmax near-tie caveat)."""
+    reqs = run.requests(R, seed=seed)[:R]
+    for r in reqs:
+        r.arrival = 0.0
+    picks = {}
+    for be in ("numpy", "jax", "fused"):
+        rb = RouteBalance(
+            RBConfig(weights=weights, decision_backend=be), bundle,
+            run.tiers)
+        rb.sim = randomize_telemetry(
+            ClusterSim(run.tiers, run.names, seed=0), seed)
+        instances, choice, _ = rb._decide_core(reqs)
+        picks[be] = [instances[int(i)].iid for i in choice]
+    agree = {be: float(np.mean([a == b for a, b in
+                                zip(picks[be], picks["fused"])]))
+             for be in ("jax", "numpy")}
+    return agree["jax"], agree["numpy"]
+
+
+def main():
+    for scene in SCENES:
+        sc = get_scenario(scene)
+        run = sc.build(dataset_n=DATASET_N)
+        bundle = run.bundle()
+        warm_reqs = run.requests(128, seed=99)
+        for wname, w in WEIGHTS:
+            parity, parity_np = _parity_probe(run, bundle, w)
+            # deterministic warm-up: compile every pow2 R bucket the
+            # overloaded cells can reach (backlog pushes batch sizes up
+            # through 128) so XLA compiles land outside the measured
+            # cells — the fused runner is cached on the bundle per
+            # weight config, so the grid below reuses these programs
+            warm = RouteBalance(
+                RBConfig(weights=w, decision_backend="fused"),
+                bundle, run.tiers)
+            warm.sim = ClusterSim(run.tiers, run.names, seed=0)
+            for R in (8, 16, 32, 64, 128):
+                warm.sim.tel.version += 1
+                warm._decide_core(warm_reqs[:R])
+            for scale in LOADS:
+                reqs = run.requests(N_CELL, lam_scale=scale, seed=0)
+                rb = RouteBalance(
+                    RBConfig(weights=w, decision_backend="fused"),
+                    bundle, run.tiers)
+                m = run.run_cell(rb, reqs, seed=0)
+                lam = sc.lam * scale
+                csv_row(
+                    f"sweep/{scene}_{wname}_x{scale}",
+                    m.get("measured_decide_ms_mean", 0.0) * 1e3,
+                    f"lam={lam:.1f}"
+                    f";I={run.n_instances}"
+                    f";q={m['quality']:.3f}"
+                    f";p50_e2e={m['p50_e2e']:.3f}"
+                    f";p99_e2e={m['p99_e2e']:.3f}"
+                    f";cost={m['cost_per_req']:.3e}"
+                    f";tput={m['throughput']:.2f}"
+                    f";goodput={m['goodput']:.2f}"
+                    f";failed={m['failed']}"
+                    f";decide_ms_per_req="
+                    f"{m.get('measured_decide_ms_per_req', 0.0):.3f}"
+                    f";parity={parity:.3f}"
+                    f";parity_np={parity_np:.3f}")
+
+
+if __name__ == "__main__":
+    from .common import flush_json
+    main()
+    flush_json("sweep")

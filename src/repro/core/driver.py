@@ -36,8 +36,12 @@ def make_requests(dataset: Dataset, which: str, arrivals: np.ndarray,
 
 def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
              requests: List[Request], seed: int = 0,
-             fail_at: Optional[Dict] = None) -> Dict:
-    """fail_at: optional {time: t, instances: [iids]} failure injection."""
+             fail_at: Optional[Dict] = None,
+             schedule: Optional[Sequence] = None,
+             schedule_seed: int = 0) -> Dict:
+    """fail_at: optional {time: t, instances: [iids]} failure injection.
+    schedule: optional scenario perturbation schedule (a sequence of
+    `repro.serving.scenarios.FailureEvent`) armed on the sim."""
     sim = ClusterSim(list(tiers), model_names, seed=seed)
     if hasattr(scheduler, "expected"):
         scheduler.expected = len(requests)
@@ -49,6 +53,9 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
             for iid in fail_at["instances"]:
                 sim.by_id[iid].fail()
         sim.push(fail_at["time"], kill)
+    if schedule:
+        from repro.serving.scenarios import apply_schedule
+        apply_schedule(sim, schedule, seed=schedule_seed)
     sim.run()
     wall = (max((r.finish_time or r.arrival) for r in requests)
             - min(r.arrival for r in requests))

@@ -25,10 +25,14 @@ scan into a single traced program, selectable via
     re-read the identical stale snapshot minus the in-flight updates.
     Shape-padding rows apply no dead-reckoning update, so the carried
     state never accumulates phantom load;
-  * batch size R and padded token length L are bucketed to powers of two
-    (`bucket_pow2`) so the program compiles O(log R · log L) shape
-    variants — and short-prompt batches run the encoder at L=8/16/…
-    instead of always paying max_len;
+  * batch size R, padded token length L and roster size I are bucketed
+    to powers of two (`bucket_pow2`) so the program compiles
+    O(log R · log L · log I) shape variants — short-prompt batches run
+    the encoder at L=8/16/… instead of always paying max_len, and the
+    scenario subsystem's rosters (13 … 128+ instances,
+    `repro.serving.scenarios`) share one compiled scan geometry per
+    pow2 bucket. Roster pad columns are permanently dead: never
+    admitted, never scored, never dead-reckoned;
   * instance death is an ``alive`` mask over the full roster (scores of
     dead instances pin to -inf) — no recompile after a failure.
 
@@ -96,18 +100,27 @@ class FusedHotPath:
         for inst in instances:
             if inst.tier.name not in tier_names:
                 tier_names.append(inst.tier.name)
-        tier_of_i = np.array([tier_names.index(i.tier.name)
-                              for i in instances], np.int32)
         heads = [bundle.heads[t] for t in tier_names]
+        # roster size is bucketed to a power of two, like R and L: pad
+        # columns are permanently dead (never admitted, never scored),
+        # so rosters of 65..128 instances share one compiled I=128 shape
+        # and the scan geometry stays uniform across scenario sweeps
+        I = len(instances)
+        self._n_real = I
+        self._Ipad = bucket_pow2(I) - I
+        tier_of_i = self._pad_i(np.array(
+            [tier_names.index(i.tier.name) for i in instances],
+            np.int32))
         self._tier_of_i = jnp.asarray(tier_of_i)
-        self._m_of_i = jnp.asarray(
-            np.array([i.model_idx for i in instances], np.int32))
-        self._maxb = jnp.asarray(
-            np.array([i.tier.max_batch for i in instances], np.float32))
-        self._price_in = jnp.asarray(
-            np.array([i.tier.price_in for i in instances], np.float32))
-        self._price_out = jnp.asarray(
-            np.array([i.tier.price_out for i in instances], np.float32))
+        self._m_of_i = jnp.asarray(self._pad_i(
+            np.array([i.model_idx for i in instances], np.int32)))
+        self._maxb = jnp.asarray(self._pad_i(
+            np.array([i.tier.max_batch for i in instances], np.float32),
+            fill=1.0))
+        self._price_in = jnp.asarray(self._pad_i(
+            np.array([i.tier.price_in for i in instances], np.float32)))
+        self._price_out = jnp.asarray(self._pad_i(
+            np.array([i.tier.price_out for i in instances], np.float32)))
         self._nominal = jnp.asarray(
             np.array([h.nominal_tpot for h in heads],
                      np.float32)[tier_of_i])
@@ -137,6 +150,14 @@ class FusedHotPath:
         self._ctx_dev = None
         self._alive_dev = None
         self._seen_version = -1
+
+    def _pad_i(self, x: np.ndarray, fill=0) -> np.ndarray:
+        """Pad an (I,) per-instance vector out to the pow2 roster
+        bucket."""
+        if self._Ipad == 0:
+            return x
+        return np.concatenate(
+            [x, np.full(self._Ipad, fill, x.dtype)])
 
     # -- traced body --------------------------------------------------------
     def _step_impl(self, tokens, mask, row_valid, budgets, len_in,
@@ -202,11 +223,18 @@ class FusedHotPath:
         the dead-reckoned device buffers forward."""
         if self._state is None or tel.version != self._seen_version:
             self._seen_version = tel.version
-            self._state = (jnp.asarray(tel.pending, jnp.float32),
-                           jnp.asarray(tel.batch, jnp.float32),
-                           jnp.asarray(tel.free, jnp.float32))
-            self._ctx_dev = jnp.asarray(tel.ctx, jnp.float32)
-            self._alive_dev = jnp.asarray(tel.alive)
+            self._state = (
+                jnp.asarray(self._pad_i(np.asarray(tel.pending,
+                                                   np.float32))),
+                jnp.asarray(self._pad_i(np.asarray(tel.batch,
+                                                   np.float32))),
+                jnp.asarray(self._pad_i(np.asarray(tel.free,
+                                                   np.float32))))
+            self._ctx_dev = jnp.asarray(
+                self._pad_i(np.asarray(tel.ctx, np.float32)))
+            # roster-bucket pad columns stay permanently dead
+            self._alive_dev = jnp.asarray(
+                self._pad_i(np.asarray(tel.alive), fill=False))
         return self._state
 
     def decide(self, batch, tel) -> Tuple[np.ndarray, np.ndarray]:

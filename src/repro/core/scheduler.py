@@ -42,9 +42,11 @@ class RBConfig:
     learned_tpot: bool = True
     knn_k: int = 10
     charge_compute: bool = True        # charge measured decision time
-    decision_backend: str = "jax"      # numpy (reference loop) |
-    #                                    jax (jitted decision core) |
-    #                                    fused (single-dispatch hot path)
+    decision_backend: str = "fused"    # fused (single-dispatch hot
+    #                                    path, the default since it
+    #                                    soaked under tests/test_soak) |
+    #                                    jax (staged jitted core) |
+    #                                    numpy (reference loop)
     knn_backend: Optional[str] = None  # override bundle's KNN backend
     #                                    (numpy | jax | pallas); staged
     #                                    backends only — fused has the

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --preset uniform --lam 12
     PYTHONPATH=src python -m repro.launch.serve --pool zoo --preset quality
+    PYTHONPATH=src python -m repro.launch.serve --scenario multitenant \
+        --preset cost --lam-scale 2.0
+
+--scenario selects a named world from `repro.serving.scenarios`
+(roster + composite multi-tenant workload + failure/recovery schedule);
+it overrides --pool/--arrivals/--lam.
 """
 from __future__ import annotations
 
@@ -12,13 +18,18 @@ import json
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", choices=("paper", "zoo"), default="paper")
+    ap.add_argument("--scenario", default="",
+                    help="named scenario from repro.serving.scenarios "
+                         "(overrides --pool/--arrivals/--lam)")
     ap.add_argument("--preset", default="uniform")
     ap.add_argument("--weights", default="",
                     help="wq,wl,wc overriding --preset")
     ap.add_argument("--lam", type=float, default=12.0)
+    ap.add_argument("--lam-scale", type=float, default=1.0,
+                    help="scenario load multiplier (with --scenario)")
     ap.add_argument("--n", type=int, default=600)
     ap.add_argument("--arrivals", default="poisson",
-                    choices=("poisson", "gamma", "square"))
+                    choices=("poisson", "gamma", "square", "flash"))
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -28,25 +39,36 @@ def main():
     from repro.serving.workload import make_arrivals
     from repro.serving.world import World, build_dataset, paper_world
 
-    if args.pool == "paper":
-        world, names = paper_world(seed=args.seed)
-        tiers = paper_pool_tiers()
-    else:
-        from examples.zoo_serving import CAPS, VERB
-        tiers = assigned_pool_tiers()
-        names = [t.model for t in tiers]
-        world = World([CAPS[m] for m in names], [VERB[m] for m in names],
-                      seed=args.seed)
-    ds = build_dataset(world, n=6000)
-    bundle = EstimatorBundle.train(ds, tiers, names)
     w = PRESETS[args.preset]
     if args.weights:
         w = tuple(float(x) for x in args.weights.split(","))
-    reqs = make_requests(
-        ds, "test", make_arrivals(args.arrivals, args.lam, args.n,
-                                  seed=args.seed))
-    rb = RouteBalance(RBConfig(weights=w), bundle, tiers)
-    m = run_cell(rb, tiers, names, reqs, seed=args.seed)
+
+    if args.scenario:
+        from repro.serving.scenarios import get_scenario
+        run = get_scenario(args.scenario).build(dataset_n=6000)
+        reqs = run.requests(args.n, lam_scale=args.lam_scale,
+                            seed=args.seed)
+        rb = RouteBalance(RBConfig(weights=w), run.bundle(), run.tiers)
+        m = run.run_cell(rb, reqs, seed=args.seed)
+        m["scenario"] = args.scenario
+        m["n_instances"] = run.n_instances
+    else:
+        if args.pool == "paper":
+            world, names = paper_world(seed=args.seed)
+            tiers = paper_pool_tiers()
+        else:
+            from examples.zoo_serving import CAPS, VERB
+            tiers = assigned_pool_tiers()
+            names = [t.model for t in tiers]
+            world = World([CAPS[m] for m in names],
+                          [VERB[m] for m in names], seed=args.seed)
+        ds = build_dataset(world, n=6000)
+        bundle = EstimatorBundle.train(ds, tiers, names)
+        reqs = make_requests(
+            ds, "test", make_arrivals(args.arrivals, args.lam, args.n,
+                                      seed=args.seed))
+        rb = RouteBalance(RBConfig(weights=w), bundle, tiers)
+        m = run_cell(rb, tiers, names, reqs, seed=args.seed)
     print(json.dumps({k: v for k, v in m.items()
                       if not isinstance(v, tuple)}, indent=1,
                      default=str))

@@ -73,6 +73,13 @@ class TelemetryArrays:
         self.alive[slot] = False
         self.version += 1
 
+    def revive(self, slot: int, t: float):
+        """Recovered instance re-enters the roster with a clean slate
+        (it lost all running/queued work when it failed)."""
+        self.alive[slot] = True
+        self.write(slot, pending=0.0, batch=0, free=int(self.max_batch[slot]),
+                   ctx=0.0, queue=0, t=t)
+
 
 class Instance:
     def __init__(self, iid: str, tier: Tier, model_idx: int, sim: "ClusterSim"):
@@ -86,11 +93,15 @@ class Instance:
         self.iter_scheduled = False
         self.busy_until = 0.0
         self.alive = True
+        self.slowdown = 1.0         # >1 = straggler (hidden from telemetry)
         # telemetry snapshot (refreshed at iteration boundaries)
-        self.snapshot: Dict = {"queue_depth": 0, "pending_decode": 0.0,
-                               "batch_size": 0, "free_slots": tier.max_batch,
-                               "mean_ctx": 0.0, "t": 0.0}
+        self.snapshot: Dict = self._idle_snapshot(0.0)
         self.total_tokens = 0
+
+    def _idle_snapshot(self, t: float) -> Dict:
+        return {"queue_depth": 0, "pending_decode": 0.0, "batch_size": 0,
+                "free_slots": self.tier.max_batch, "mean_ctx": 0.0,
+                "t": t}
 
     # -- scheduler-facing ---------------------------------------------------
     def submit(self, req: Request, t: float, pred_len: float,
@@ -125,7 +136,7 @@ class Instance:
                 in_cost = req.prompt.len_in * self.tier.price_in / 1e6
                 rem = max(req.budget - in_cost, 0.0)
                 budget_tok = int(rem / (self.tier.price_out / 1e6 + 1e-30))
-            dt += self.tier.prefill_time(req.prompt.len_in)
+            dt += self.tier.prefill_time(req.prompt.len_in) * self.slowdown
             req.first_token_time = t + dt
             self.running.append(_Seq(
                 req=req, target_tokens=true_len, max_tokens=max_tok,
@@ -140,7 +151,7 @@ class Instance:
         if self.running:
             b = len(self.running)
             mean_ctx = sum(s.ctx for s in self.running) / b
-            dt += self.tier.tpot(b, mean_ctx)
+            dt += self.tier.tpot(b, mean_ctx) * self.slowdown
             done = []
             for s in self.running:
                 s.generated += 1
@@ -191,6 +202,32 @@ class Instance:
             self.sim.completed.append(req)
         self.running = []
         self.queue = []
+
+    def recover(self, t: float):
+        """Node recovery: re-enter the roster with a genuinely clean
+        slate — empty engine, healthy speed (a recovered node is a
+        replacement, not the same degraded hardware). Failed work is not
+        replayed; the paper's fleet treats failed requests as lost."""
+        if self.alive:
+            return
+        self.alive = True
+        self.busy_until = t
+        # iter_scheduled is deliberately NOT reset: a pre-failure
+        # _iterate event may still be pending in the heap, and forcing
+        # the flag would let a new submit start a second concurrent
+        # iteration chain (2x decode speed). The stale event clears the
+        # flag itself when it fires.
+        self.slowdown = 1.0
+        self.snapshot = self._idle_snapshot(t)
+        self.sim.tel.revive(self.slot, t)
+
+    def set_slowdown(self, factor: float):
+        """Straggler injection: scale this instance's real prefill/decode
+        time by `factor` (>1 = slower). Telemetry is NOT adjusted — the
+        scheduler's TPOT heads keep predicting healthy-node speed, which
+        is exactly the model-mismatch stress the paper's dead-reckoning
+        arm is meant to survive."""
+        self.slowdown = float(factor)
 
 
 class ClusterSim:

@@ -15,8 +15,10 @@ def _pct(x, p):
 
 
 def aggregate(reqs: List[Request], tiers: List[Tier],
-              model_names: List[str], wall: Optional[float] = None
-              ) -> Dict:
+              model_names: List[str], wall: Optional[float] = None,
+              slo_s: float = 30.0) -> Dict:
+    """`slo_s`: end-to-end latency SLO for the goodput metric (served
+    requests finishing within the SLO, per wall second)."""
     done = [r for r in reqs if r.finish_time is not None and not r.failed]
     failed = [r for r in reqs if r.failed]
     e2e = np.array([r.e2e for r in done])
@@ -45,7 +47,10 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
         "quality": float(lookup_q.mean()) if len(done) else 0.0,
         "served_quality": float(served_q.mean()) if len(done) else 0.0,
         "mean_e2e": float(e2e.mean()) if len(done) else float("nan"),
+        "p50_e2e": _pct(e2e, 50),
         "p95_e2e": _pct(e2e, 95), "p99_e2e": _pct(e2e, 99),
+        "goodput": (float((e2e <= slo_s).sum()) / wall
+                    if wall and len(done) else 0.0),
         "mean_ttft": float(ttft.mean()) if len(ttft) else float("nan"),
         "p99_ttft": _pct(ttft, 99),
         "cost_per_req": float(costs.mean()) if len(done) else 0.0,

@@ -17,6 +17,7 @@ class Request:
     true_quality: np.ndarray       # (M,) hidden from the scheduler
     true_length: np.ndarray        # (M,) hidden from the scheduler
     budget: Optional[float] = None  # USD, optional per-request cost budget
+    tenant: Optional[str] = None   # tenant class in composite scenarios
 
     # filled at dispatch
     instance: Optional[str] = None

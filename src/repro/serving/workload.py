@@ -1,8 +1,8 @@
 """Arrival processes: Poisson (the paper's default), gamma-bursty and
-square-wave (§6.9 non-stationary robustness)."""
+square-wave (§6.9 non-stationary robustness), plus the flash-crowd
+piecewise-Poisson trace used by the scenario subsystem
+(`repro.serving.scenarios`)."""
 from __future__ import annotations
-
-from typing import Iterator, List, Optional
 
 import numpy as np
 
@@ -42,12 +42,37 @@ def square_wave_arrivals(lam: float, n: int, period: float = 60.0,
     return np.asarray(out)
 
 
-def make_arrivals(kind: str, lam: float, n: int, seed: int = 0
-                  ) -> np.ndarray:
+def flash_crowd_arrivals(lam: float, n: int, burst_start: float = 20.0,
+                         burst_dur: float = 10.0, burst_mult: float = 5.0,
+                         seed: int = 0) -> np.ndarray:
+    """Baseline-Poisson trace with one flash crowd: the rate jumps to
+    burst_mult*lam inside [burst_start, burst_start+burst_dur). Unlike
+    the square wave this is NOT mean-matched — a flash crowd adds load,
+    which is the point (high-load separation, §6.5)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for _ in range(n):
+        in_burst = burst_start <= t < burst_start + burst_dur
+        rate = lam * (burst_mult if in_burst else 1.0)
+        t += rng.exponential(1.0 / max(rate, 1e-9))
+        out.append(t)
+    return np.asarray(out)
+
+
+ARRIVAL_KINDS = ("poisson", "gamma", "square", "flash")
+
+
+def make_arrivals(kind: str, lam: float, n: int, seed: int = 0,
+                  **kw) -> np.ndarray:
+    """Dispatch on `kind`, forwarding process-specific kwargs (cv for
+    gamma; period/high_frac for square; burst_* for flash)."""
     if kind == "poisson":
-        return poisson_arrivals(lam, n, seed)
+        return poisson_arrivals(lam, n, seed, **kw)
     if kind == "gamma":
-        return gamma_bursty_arrivals(lam, n, seed=seed)
+        return gamma_bursty_arrivals(lam, n, seed=seed, **kw)
     if kind == "square":
-        return square_wave_arrivals(lam, n, seed=seed)
+        return square_wave_arrivals(lam, n, seed=seed, **kw)
+    if kind == "flash":
+        return flash_crowd_arrivals(lam, n, seed=seed, **kw)
     raise ValueError(kind)

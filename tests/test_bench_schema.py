@@ -1,0 +1,99 @@
+"""Pin the BENCH_*.json artifact schema so perf trajectories stay
+machine-comparable across PRs: `benchmarks.common.csv_row` /
+`flush_json` produce {module, n_req_per_cell, rows[...]}, each row
+{name, us_per_call, derived, <parsed k=v floats>}. The committed
+BENCH_hotpath.json and BENCH_sweep.json must conform — and the sweep
+must cover the frontier grid the fused-by-default graduation relied
+on."""
+import json
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+TOP_KEYS = {"module", "n_req_per_cell", "rows"}
+ROW_KEYS = {"name", "us_per_call", "derived"}
+
+
+def _load(name):
+    p = REPO / name
+    assert p.exists(), f"{name} not committed"
+    return json.loads(p.read_text())
+
+
+def _check_schema(doc, module):
+    assert TOP_KEYS <= set(doc), doc.keys()
+    assert doc["module"] == module
+    assert isinstance(doc["n_req_per_cell"], int)
+    assert doc["rows"], "no rows"
+    for row in doc["rows"]:
+        assert ROW_KEYS <= set(row), row
+        assert isinstance(row["name"], str) and row["name"]
+        assert isinstance(row["us_per_call"], float)
+        assert row["us_per_call"] >= 0
+        assert isinstance(row["derived"], str)
+        # every k=v pair in derived must be surfaced as a parsed field
+        for part in row["derived"].split(";"):
+            if "=" in part:
+                k = part.split("=", 1)[0].strip()
+                assert k in row, f"unparsed derived field {k!r}"
+
+
+def test_csv_row_flush_json_roundtrip(tmp_path, capsys):
+    from benchmarks.common import csv_row, discard_rows, flush_json
+    discard_rows()
+    csv_row("unit/cell_a", 12.5, "speedup=2.00x;agree=1.000;note=hi")
+    csv_row("unit/cell_b", 7.0, "p99_e2e=1.234")
+    out = tmp_path / "BENCH_unit.json"
+    flush_json("unit", str(out))
+    doc = json.loads(out.read_text())
+    _check_schema(doc, "unit")
+    assert len(doc["rows"]) == 2
+    a, b = doc["rows"]
+    assert a["speedup"] == 2.0          # "x" suffix stripped to float
+    assert a["agree"] == 1.0
+    assert a["note"] == "hi"            # non-numeric kept verbatim
+    assert b["p99_e2e"] == 1.234
+    # buffer reset: a second flush writes nothing new
+    flush_json("unit", str(out))
+    assert json.loads(out.read_text())["rows"] == []
+
+
+def test_bench_hotpath_artifact_schema():
+    doc = _load("BENCH_hotpath.json")
+    _check_schema(doc, "hotpath")
+    fused = [r for r in doc["rows"] if "fused" in r["name"]]
+    assert fused, "hotpath artifact lost its fused rows"
+    assert all(r.get("agree") == 1.0 for r in fused)
+
+
+def test_bench_sweep_artifact_schema_and_grid():
+    doc = _load("BENCH_sweep.json")
+    _check_schema(doc, "sweep")
+    rows = doc["rows"]
+    scenes, weights, loads = set(), set(), set()
+    for r in rows:
+        # sweep/<scene>_<weight>_x<scale>
+        body = r["name"].split("/", 1)[1]
+        stem, scale = body.rsplit("_x", 1)
+        scene, weight = stem.rsplit("_", 1)
+        scenes.add(scene)
+        weights.add(weight)
+        loads.add(float(scale))
+        for col in ("lam", "I", "q", "p50_e2e", "p99_e2e", "cost",
+                    "tput", "goodput", "decide_ms_per_req", "parity",
+                    "parity_np"):
+            assert col in r, f"{r['name']} missing {col}"
+        # fused-vs-staged-jax is the bitwise graduation guarantee;
+        # fused-vs-numpy may lose same-tier replica near-ties (the
+        # float32-vs-float64 caveat) but must stay essentially exact
+        assert r["parity"] == pytest.approx(1.0)
+        assert r["parity_np"] >= 0.9
+        assert r["p99_e2e"] >= r["p50_e2e"] >= 0
+        assert r["decide_ms_per_req"] >= 0
+    # the graduation grid: >= 3 weight vectors x 3 loads x 2 scenarios
+    assert len(weights) >= 3, weights
+    assert len(loads) >= 3, loads
+    assert len(scenes) >= 2, scenes
+    assert len(rows) >= len(weights) * len(loads) * len(scenes)

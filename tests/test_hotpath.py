@@ -24,16 +24,9 @@ MODES = ("full", "off_reactive", "off_predictive", "static_prior")
 
 def _loaded_sim(ctx, seed=9):
     """A sim whose telemetry arrays carry mid-run-looking load."""
-    sim = ClusterSim(ctx["tiers"], ctx["names"], seed=0)
-    rng = np.random.default_rng(seed)
-    tel = sim.tel
-    I = len(sim.instances)
-    tel.pending[:] = rng.uniform(0, 3000, I)
-    tel.batch[:] = rng.integers(0, 12, I)
-    tel.free[:] = rng.integers(0, 6, I)
-    tel.ctx[:] = rng.uniform(0, 2048, I)
-    tel.version += 1
-    return sim
+    from repro.serving.scenarios import randomize_telemetry
+    return randomize_telemetry(
+        ClusterSim(ctx["tiers"], ctx["names"], seed=0), seed)
 
 
 def _batch(ctx, R=24, seed=5, with_budgets=True):
@@ -245,8 +238,10 @@ def test_fused_raises_on_dead_roster(small_ctx):
         rb._decide_core(_batch(small_ctx, R=4))
 
 
-def test_default_backend_is_jax():
-    assert RBConfig().decision_backend == "jax"
+def test_default_backend_is_fused():
+    """The fused single-dispatch program is the production default; the
+    staged paths stay selectable under the parity harness."""
+    assert RBConfig().decision_backend == "fused"
 
 
 def test_bucket_pow2():

