@@ -120,7 +120,7 @@ def flush_json(module: str, path: str = None) -> str:
     rows, _ROWS[:] = list(_ROWS), []
     with open(path, "w") as f:
         json.dump({"module": module, "n_req_per_cell": N_REQ,
-                   "rows": rows}, f, indent=1)
+                   "n_dataset": N_DATASET, "rows": rows}, f, indent=1)
     print(f"# wrote {path} ({len(rows)} rows)")
     return path
 

@@ -14,7 +14,18 @@ Grid: (R, I) up to R=512, I=128 (instance pools are the paper's 4 tiers
 proportionally scaled). Interleaved min-of-N timing so CPU drift doesn't
 bias one backend. Rows land in BENCH_hotpath.json via the benchmarks.run
 JSON emission (or the __main__ block when run directly). Smoke mode for
-CI: REPRO_HOTPATH_SMOKE=1 trims the grid to seconds.
+CI: REPRO_HOTPATH_SMOKE=1 trims the grid to seconds (a subset of the
+full grid, so `benchmarks.perf_guard` can diff smoke rows against the
+committed artifact).
+
+Fused rows carry a host/stage/device/sync breakdown (mean us/call over
+the timed reps, from `FusedHotPath.stats`): `stage_us` is the gather
+into the preallocated staging buffers, `host_us` is all host-side work
+up to dispatch (staging + telemetry delta assembly), `dispatch_us` is
+the jitted-call dispatch, `device_us` is the wait on the device program
+at fetch, and `sync_us` is the device->host result copy. Since the
+host-path rebuild (SoA ingest + delta telemetry), `host_us` should be
+microseconds — the paper's "router overhead" is all `device_us`.
 """
 from __future__ import annotations
 
@@ -30,7 +41,8 @@ from repro.serving.cluster import ClusterSim
 
 SMOKE = os.environ.get("REPRO_HOTPATH_SMOKE", "") not in ("", "0")
 GRID = (((8, 13), (16, 13)) if SMOKE else
-        ((8, 13), (64, 13), (256, 13), (256, 52), (256, 128), (512, 128)))
+        ((8, 13), (16, 13), (64, 13), (256, 13), (256, 52), (256, 128),
+         (512, 128)))
 BACKENDS = ("numpy", "jax", "fused")
 
 
@@ -67,9 +79,10 @@ def _bench_cell(ctx, R, I, reps):
                           tiers)
         rb.sim = sim
         rb._decide_core(batch)                  # compile + warm
-        # parity guard on a fresh telemetry read (the fused runner
-        # otherwise keeps dead-reckoning across repeated calls)
-        tel.version += 1
+        # repeated calls are parity-safe by construction now: the fused
+        # runner's carried mirror equals a fresh host read of `tel`
+        # (reseed-per-batch semantics; telemetry hasn't moved between
+        # calls, so the carry arm is exact)
         instances, choice, _ = rb._decide_core(batch)
         picks[be] = [instances[int(i)].iid for i in choice]
         rbs[be] = rb
@@ -79,18 +92,23 @@ def _bench_cell(ctx, R, I, reps):
         all(picks[be][r] == picks["numpy"][r] for be in BACKENDS)
         for r in range(R)]))
     ts = {be: [] for be in BACKENDS}
+    s0 = dict(rbs["fused"]._fused.stats)        # breakdown window start
     for _ in range(reps):                       # interleaved timing
         for be, rb in rbs.items():
             t0 = time.perf_counter()
             rb._decide_core(batch)
             ts[be].append(time.perf_counter() - t0)
+    s1 = rbs["fused"]._fused.stats
+    breakdown = {k: (s1[k] - s0[k]) / reps * 1e6
+                 for k in ("host_s", "stage_s", "dispatch_s", "device_s",
+                           "sync_s")}           # mean us/call over reps
     best = {be: min(v) for be, v in ts.items()}
     # per-rep paired differences share ambient (CPU-frequency, co-tenant)
     # conditions, so their median is far more noise-robust than the
     # difference of the mins
     paired = {be: float(np.median(np.array(ts["jax"]) - np.array(v)))
               for be, v in ts.items()}
-    return best, paired, agree
+    return best, paired, agree, breakdown
 
 
 def main():
@@ -98,7 +116,7 @@ def main():
     margins = {}
     for R, I in GRID:
         reps = 10 if R >= 256 else 16
-        best, paired, agree = _bench_cell(ctx, R, I, reps)
+        best, paired, agree, bd = _bench_cell(ctx, R, I, reps)
         margins[(R, I)] = paired["fused"] * 1e3
         for be in BACKENDS:
             extra = ""
@@ -107,7 +125,12 @@ def main():
             if be == "fused":
                 extra += (f";speedup_vs_jax={best['jax']/best[be]:.2f}x"
                           f";margin_vs_jax_ms={paired['fused']*1e3:.2f}"
-                          f";agree={agree:.3f}")
+                          f";agree={agree:.3f}"
+                          f";host_us={bd['host_s']:.1f}"
+                          f";stage_us={bd['stage_s']:.1f}"
+                          f";dispatch_us={bd['dispatch_s']:.1f}"
+                          f";device_us={bd['device_s']:.1f}"
+                          f";sync_us={bd['sync_s']:.1f}")
             csv_row(f"hotpath/{be}_R{R}_I{I}", best[be] * 1e6,
                     f"per_req_us={best[be]/R*1e6:.1f}{extra}")
     if not SMOKE:

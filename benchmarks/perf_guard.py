@@ -1,0 +1,97 @@
+"""CI perf-regression guard for the fused hot path.
+
+Re-runs the hotpath smoke grid (REPRO_HOTPATH_SMOKE=1 — a subset of the
+full grid, so every smoke row has a committed counterpart) and fails if
+any backend's ``us_per_call`` regresses more than the tolerance against
+the committed ``BENCH_hotpath.json`` baseline:
+
+  python -m benchmarks.perf_guard
+
+Only the **fused** rows gate (the production hot path this guard
+protects); staged numpy/jax rows print informationally — their Python
+loops are far noisier under co-tenant load, and a regression there
+doesn't ship. A failing cell is re-timed once (min of the two runs)
+before it counts, since even min-of-N timing jitters tens of percent on
+a busy box.
+
+The tolerance (default 1.25 = 25%) is multiplicative and env-tunable
+via ``REPRO_PERF_GUARD_TOL`` — absolute wall-clock differs across
+machines, so CI boxes that are systematically slower than the box that
+produced the committed artifact should raise it rather than delete the
+guard. Getting *faster* than baseline never fails; rows with no
+committed counterpart are reported and skipped.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+import tempfile
+
+TOL = float(os.environ.get("REPRO_PERF_GUARD_TOL", "1.25"))
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _time_smoke_grid() -> dict:
+    from benchmarks import common
+    common.discard_rows()
+    from benchmarks import hotpath
+    hotpath.main()
+    with tempfile.NamedTemporaryFile("r", suffix=".json") as tmp:
+        common.flush_json("hotpath_guard", tmp.name)
+        rows = json.load(open(tmp.name))["rows"]
+    return {r["name"]: r["us_per_call"] for r in rows}
+
+
+def main() -> int:
+    os.environ["REPRO_HOTPATH_SMOKE"] = "1"
+    baseline_doc = json.loads((REPO / "BENCH_hotpath.json").read_text())
+    from benchmarks import common
+    # the KNN index scales with the dataset, so timings are only
+    # comparable at the baseline's dataset size — refuse a silent
+    # apples-to-oranges gate (a paper-scale baseline would make every
+    # default-scale run pass, a small-scale one would fail every run)
+    base_n = baseline_doc.get("n_dataset")
+    if base_n is not None and base_n != common.N_DATASET:
+        print(f"perf guard: committed baseline was produced at "
+              f"REPRO_BENCH_DATASET={base_n}, this run uses "
+              f"{common.N_DATASET} — set REPRO_BENCH_DATASET={base_n} "
+              f"(or regenerate the baseline) before gating")
+        return 1
+    baseline = {r["name"]: r["us_per_call"]
+                for r in baseline_doc["rows"]}
+
+    fresh = _time_smoke_grid()
+    if any(name in baseline and us / baseline[name] > TOL
+           and "fused" in name for name, us in fresh.items()):
+        print("# possible regression: re-timing once to shed noise")
+        rerun = _time_smoke_grid()
+        fresh = {name: min(us, rerun.get(name, us))
+                 for name, us in fresh.items()}
+
+    failures, missing = [], []
+    for name, us in fresh.items():
+        base = baseline.get(name)
+        if base is None:
+            missing.append(name)
+            continue
+        ratio = us / base
+        gates = "fused" in name
+        verdict = ("ok" if ratio <= TOL else
+                   "REGRESSED" if gates else "slow (informational)")
+        print(f"{name}: {us:.0f} us vs baseline {base:.0f} us "
+              f"({ratio:.2f}x, tol {TOL:.2f}x) {verdict}")
+        if gates and ratio > TOL:
+            failures.append((name, round(ratio, 2)))
+    if missing:
+        print(f"# no committed baseline for {missing} (new cells pass)")
+    if failures:
+        print(f"PERF REGRESSION: {failures}")
+        return 1
+    print(f"# perf guard ok: fused cells within {TOL:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,12 +7,14 @@ Each cell is a full `ClusterSim` run under
 ``RBConfig(decision_backend="fused")``: one scenario (roster + composite
 workload + perturbation schedule), one weight preset, one load multiple
 of the scenario's nominal rate. Rows carry p50/p99 end-to-end latency,
-per-request cost, measured decision time, goodput (SLO-bounded
-throughput) and a per-weight-config parity probe — ``parity`` is
-fused-vs-staged-jax agreement (bitwise-guaranteed, gated at 1.0 in CI)
-and ``parity_np`` is fused-vs-numpy (informational: float64-vs-float32
-argmax near-ties can flip same-tier replicas) — landing in
-``BENCH_sweep.json`` via benchmarks.run.
+per-request cost, measured decision time with a host/stage/device/sync
+breakdown (mean us per fired batch, from ``FusedHotPath.stats`` — see
+``benchmarks.hotpath`` for the column semantics) plus delta-telemetry
+counters, goodput (SLO-bounded throughput) and a per-weight-config
+parity probe — ``parity`` is fused-vs-staged-jax agreement and
+``parity_np`` fused-vs-numpy; both are exact-1.0 guarantees since the
+epsilon-quantized tie-break (`repro.core.scoring`) and gated at 1.0 in
+CI — landing in ``BENCH_sweep.json`` via benchmarks.run.
 
 Smoke mode for CI: REPRO_SWEEP_SMOKE=1 trims the grid (small rosters,
 low n) to under a couple of minutes while keeping the full
@@ -42,9 +44,9 @@ DATASET_N = 300 if SMOKE else 1500
 
 def _parity_probe(run, bundle, weights, R=16, seed=7):
     """Probe batch under THIS cell's weight vector on a randomly-loaded
-    roster. Returns (fused-vs-staged-jax agreement — bitwise-guaranteed,
-    the CI gate; fused-vs-numpy agreement — informational, subject to
-    the float32-vs-float64 argmax near-tie caveat)."""
+    roster. Returns (fused-vs-staged-jax agreement, fused-vs-numpy
+    agreement); both are exact-parity guarantees under the
+    epsilon-quantized tie-break and gate the artifact at 1.0."""
     reqs = run.requests(R, seed=seed)[:R]
     for r in reqs:
         r.arrival = 0.0
@@ -81,7 +83,6 @@ def main():
                 bundle, run.tiers)
             warm.sim = ClusterSim(run.tiers, run.names, seed=0)
             for R in (8, 16, 32, 64, 128):
-                warm.sim.tel.version += 1
                 warm._decide_core(warm_reqs[:R])
             for scale in LOADS:
                 reqs = run.requests(N_CELL, lam_scale=scale, seed=0)
@@ -90,6 +91,14 @@ def main():
                     bundle, run.tiers)
                 m = run.run_cell(rb, reqs, seed=0)
                 lam = sc.lam * scale
+                # per-fired-batch decision breakdown over the whole cell
+                # (FusedHotPath.stats is a per-cell window: for_bundle
+                # resets it when the cell's scheduler first decides)
+                st = rb._fused.stats if rb._fused is not None else {}
+                calls = max(st.get("calls", 0), 1)
+                bd = {k: st.get(k, 0.0) / calls * 1e6
+                      for k in ("host_s", "stage_s", "dispatch_s",
+                                "device_s", "sync_s")}
                 csv_row(
                     f"sweep/{scene}_{wname}_x{scale}",
                     m.get("measured_decide_ms_mean", 0.0) * 1e3,
@@ -104,6 +113,14 @@ def main():
                     f";failed={m['failed']}"
                     f";decide_ms_per_req="
                     f"{m.get('measured_decide_ms_per_req', 0.0):.3f}"
+                    f";host_us={bd['host_s']:.1f}"
+                    f";stage_us={bd['stage_s']:.1f}"
+                    f";dispatch_us={bd['dispatch_s']:.1f}"
+                    f";device_us={bd['device_s']:.1f}"
+                    f";sync_us={bd['sync_s']:.1f}"
+                    f";full_reseeds={st.get('full_reseed', 0)}"
+                    f";delta_syncs={st.get('delta_sync', 0)}"
+                    f";carries={st.get('carry', 0)}"
                     f";parity={parity:.3f}"
                     f";parity_np={parity_np:.3f}")
 

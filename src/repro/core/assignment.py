@@ -41,10 +41,22 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
     """
     R, I = q_hat_inst.shape
     choice = np.full(R, -1, np.int64)
-    d = d.astype(np.float64).copy()
-    b = b.astype(np.float64).copy()
-    b0 = np.maximum(b.copy(), 1.0)      # snapshot batch (TPOT reference)
-    free = free.astype(np.float64).copy()
+    # the loop follows the input dtype: the scheduler's staged numpy
+    # path passes float32 so all three backends share one arithmetic
+    # contract (the T/score chains are then bitwise the jitted cores');
+    # direct callers with float64 inputs keep the legacy double loop
+    dt = np.float32 if q_hat_inst.dtype == np.float32 else np.float64
+    q_hat_inst = np.asarray(q_hat_inst, dt)
+    c_hat = np.asarray(c_hat, dt)
+    len_inst = np.asarray(len_inst, dt)
+    tpot = np.asarray(tpot, dt)
+    if nominal_tpot is not None:
+        nominal_tpot = np.asarray(nominal_tpot, dt)
+    max_batch = np.asarray(max_batch, dt)
+    d = d.astype(dt).copy()
+    b = b.astype(dt).copy()
+    b0 = np.maximum(b.copy(), dt(1.0))  # snapshot batch (TPOT reference)
+    free = free.astype(dt).copy()
     est_T = np.zeros(R)
     for r in order:
         wait = np.where(free > 0, 0.0, d / np.maximum(b, 1.0))
@@ -61,9 +73,16 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
             w = (weights[0], 0.0, weights[2])
             s = score_row(q_hat_inst[r], c_hat[r], T, w,
                           None if allowed is None else allowed[r])
-            # model score is instance-blind: tie-break within winner model
+            # model score is instance-blind: tie-break within winner
+            # model. Scores come back epsilon-quantized (exact multiples
+            # of SCORE_QUANTUM), so the 1e-9 nudge — far below the
+            # quantum, far above float64 eps — orders candidates inside
+            # a quantized tie group without ever crossing groups. The
+            # nudge runs in float64 even when the loop is float32 (it
+            # would underflow an O(1) float32 score).
             tie = (d + b) if latency_mode == "off_reactive" else T
-            s = s - 1e-9 * (tie / max(tie.max(), 1e-9))
+            tn = (tie / max(tie.max(), 1e-9)).astype(np.float64)
+            s = s.astype(np.float64) - 1e-9 * tn
         else:
             s = score_row(q_hat_inst[r], c_hat[r], T, weights,
                           None if allowed is None else allowed[r])

@@ -15,9 +15,17 @@ import numpy as np
 
 
 def cost_matrix(len_in, pred_len, price_in, price_out, xp=np):
-    """Ĉ(r,i) = (ℓ_in c_in + L̂ c_out) / 1e6 over (R, I)."""
+    """Ĉ(r,i) = (ℓ_in c_in + L̂ c_out) · 1e-6 over (R, I).
+
+    The per-token scale is applied as a reciprocal multiply, not a
+    division: XLA rewrites division by a constant into multiplication by
+    its (correctly rounded) reciprocal, so spelling the multiply out
+    keeps the numpy float32 evaluation on the jitted backends' exact
+    arithmetic (the sole remaining cross-backend difference is FMA
+    contraction of the mul-add, ~1 ulp, which the epsilon-quantized
+    scoring grid absorbs)."""
     return (len_in[:, None] * price_in[None, :]
-            + pred_len * price_out[None, :]) / 1e6
+            + pred_len * price_out[None, :]) * 1e-6
 
 
 def admission_math(budgets, len_in, pred_len, price_in, price_out, xp=np,

@@ -24,9 +24,12 @@ is built with ``KNNEstimator(backend="pallas")`` or the scheduler is
 configured with ``RBConfig(knn_backend="pallas")``.
 
 Differential parity with the numpy loop is asserted in
-``tests/test_decision_parity.py`` across every mode arm; the math here
-is float32 (the jit default) while numpy runs float64, so parity holds
-exactly away from argmax ties and the tests pin seeds where it does.
+``tests/test_decision_parity.py`` across every mode arm. The math here
+is float32 (the jit default) while numpy runs float64; the shared
+scoring math epsilon-quantizes Eq. 1 scores (`repro.core.scoring`), so
+sub-quantum float noise collapses to exact, identically-broken ties in
+both precisions and the randomized soak asserts three-way assignment
+parity on every seed with no pinned exclusions (``tests/test_soak.py``).
 """
 from __future__ import annotations
 
@@ -81,8 +84,9 @@ def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
             # model. The numpy loop subtracts 1e-9 * normalized tie in
             # float64; that term is below float32 eps for O(1) scores,
             # so realize the same order explicitly — least tie metric
-            # among the exactly score-tied candidates (same-tier
-            # replicas tie bitwise: identical model column + price)
+            # among the score-tied candidates. Scores arrive
+            # epsilon-quantized from masked_score, so the tie groups
+            # are identical across float32/float64 backends.
             tie = (d + b) if latency_mode == "off_reactive" else T
             tn = tie / jnp.maximum(tie.max(), 1e-9)
             i = jnp.argmin(jnp.where(s >= s.max(), tn, jnp.inf))

@@ -20,7 +20,18 @@ from repro.serving.world import Dataset
 
 def make_requests(dataset: Dataset, which: str, arrivals: np.ndarray,
                   budgets: Optional[np.ndarray] = None,
-                  limit: Optional[int] = None) -> List[Request]:
+                  limit: Optional[int] = None,
+                  encoder=None) -> List[Request]:
+    """Build a request stream plus its SoA ingest columns
+    (`repro.serving.request.RequestColumns`): token/length/budget
+    columns are materialized here, once, at workload-generation time, so
+    the scheduler's steady-state decision path stages batches with
+    vectorized gathers instead of per-request Python. Pass `encoder`
+    (e.g. ``bundle.encoder``) to also pre-fill the prompt-embedding
+    column up front; otherwise the first scheduler to see the stream
+    fills it lazily at enqueue time."""
+    from repro.serving.request import RequestColumns
+
     prompts, Q, L = dataset.split(which)
     n = len(arrivals) if limit is None else min(limit, len(arrivals))
     reqs = []
@@ -31,6 +42,9 @@ def make_requests(dataset: Dataset, which: str, arrivals: np.ndarray,
             true_quality=Q[j], true_length=L[j],
             budget=None if budgets is None or np.isnan(budgets[i])
             else float(budgets[i])))
+    cols = RequestColumns.from_requests(reqs)
+    if encoder is not None:
+        cols.ensure_embeddings(encoder)
     return reqs
 
 

@@ -1,61 +1,106 @@
 """Single-dispatch fused hot path: the whole per-batch RouteBalance
-decision as ONE jitted device program (§4.2/§6.3).
+decision as ONE jitted device program (§4.2/§6.3), fed by the
+zero-allocation SoA ingest layer.
 
-After PR 1 the hot path was still four device dispatches with host round
-trips between them: encoder-jit → numpy → KNN-jit → numpy → a per-tier
-Python loop over numpy GBM heads → decide-jit, re-marshalling instance
-state from Python dict telemetry every `_fire`. This module fuses
-encode → KNN top-k → per-tier packed-GBM TPOT heads
-(`gbm.predict_packed_gathered`) → Eq. 2 admission → LPT-ordered greedy
-scan into a single traced program, selectable via
-``RBConfig(decision_backend="fused")``:
+After PR 2/3 the fused program was already one dispatch per batch, but
+the steady-state host path around it still did per-request Python work
+and fresh allocations every batch: four list comprehensions to marshal
+tokens/budgets/lengths, a fresh (Rb, Lb) token matrix + mask, a full
+host→device re-upload of the (I,)×5 telemetry state whenever
+``TelemetryArrays.version`` moved (i.e. on every batch under real
+traffic, so the dead-reckoned carry branch was dead code), a per-batch
+encoder forward over the padded token matrix, and a blocking
+``np.asarray`` on the result. This module removes all of it:
 
-  * every constant — encoder params, the KNN index, the per-tier TPOT
-    boosters stacked into one packed ensemble (`gbm.pack_ensemble`), the
-    per-instance static vectors (model column, tier row, prices, max
-    batch, nominal TPOT) — is closed over once and lives on device;
-  * the dead-reckoned instance state (d, b, free, ctx) is
-    device-resident across batches: the state buffers are donated into
-    the jitted step and the post-scan state comes back out. Whenever
-    fresh telemetry exists — ``TelemetryArrays.version`` moved, i.e. ANY
-    instance iterated since the last batch — the whole state refreshes
-    from the array view (matching the staged backends' reseed-per-batch
-    semantics); only when nothing on the cluster moved at all is the
-    dead-reckoned state carried forward, where the staged paths would
-    re-read the identical stale snapshot minus the in-flight updates.
-    Shape-padding rows apply no dead-reckoning update, so the carried
-    state never accumulates phantom load;
-  * batch size R, padded token length L and roster size I are bucketed
-    to powers of two (`bucket_pow2`) so the program compiles
-    O(log R · log L · log I) shape variants — short-prompt batches run
-    the encoder at L=8/16/… instead of always paying max_len, and the
-    scenario subsystem's rosters (13 … 128+ instances,
-    `repro.serving.scenarios`) share one compiled scan geometry per
-    pow2 bucket. Roster pad columns are permanently dead: never
-    admitted, never scored, never dead-reckoned;
-  * instance death is an ``alive`` mask over the full roster (scores of
-    dead instances pin to -inf) — no recompile after a failure.
+  * **SoA ingest** — token ids, lengths, ``len_in`` and budgets live in
+    ``repro.serving.request.RequestColumns`` built once at
+    workload-generation time, and the prompt embeddings are memoized
+    there too (the masked-pooling encoder is bitwise stable under
+    batch/length padding, so embedding a prompt once at ingest equals
+    the per-batch encode bit for bit). A decision batch is a row-index
+    slice into those columns;
+  * **preallocated staging** — per-pow2(R)-bucket host buffers, double
+    buffered so writing batch N+1 never aliases batch N's in-flight
+    transfer; staging is a handful of vectorized ``np.take`` gathers
+    with zero Python-level per-request work and zero steady-state
+    allocation (the token/mask staging of earlier PRs disappears
+    entirely: tokens stay at ingest, the program starts from
+    embeddings);
+  * **incremental device telemetry** — the (d, b, free, ctx) state is a
+    device-resident mirror of ``TelemetryArrays``; each batch scatters
+    only the rows written since the last sync (``tel.dirty_rows``)
+    inside the jitted step, with a full reseed only on roster-shape
+    events (fail/recover, tracked by ``tel.roster_version``) or when
+    most of the roster is dirty. The refreshed mirror is bitwise the
+    staged backends' reseed-per-batch host read — untouched rows'
+    telemetry has not moved — so carry-forward is now the common case
+    AND exact-parity-safe (the PR-2 semantics, which carried post-scan
+    dead-reckoned state, only matched staged when nothing on the
+    cluster moved; that branch almost never fired and silently diverged
+    when it did not);
+  * **async dispatch** — ``decide_cols`` returns a ``LazyDecision``
+    whose host fetch is deferred to the scheduler's dispatch point, so
+    residual accounting and next-batch staging overlap device
+    execution. The carried mirror chains batch-to-batch on device
+    through donated buffers without a host round trip.
 
-Parity: the masked-pooling encoder and the top-k feed are bitwise stable
-under both R- and L-padding, and the packed GBM accumulates per tree in
-the numpy rounding order, so the fused program makes exactly the staged
-backends' assignments at fixed seeds (asserted across every mode arm in
-``tests/test_hotpath.py``; the usual float32 argmax-tie caveat applies).
+Batch size R and roster size I are still bucketed to powers of two
+(`bucket_pow2`) for O(log R · log I) compile variants; roster pad
+columns stay permanently dead and instance death is an ``alive`` mask
+(no recompile after a failure). Eq. 1 scores are epsilon-quantized in
+the shared scoring math (`repro.core.scoring`), so the fused program
+makes exactly the staged backends' assignments — numpy included — on
+randomized worlds (``tests/test_soak.py``).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.estimators.embedding import pad_tokens
 from repro.estimators.gbm import pack_ensemble, predict_packed_gathered
 from repro.estimators.knn import topk_soft_lookup
 
 from .budget import admission_math, cost_matrix
 from .decision_jax import _greedy_scan, bucket_pow2
+
+
+def _new_stats() -> Dict:
+    return {"calls": 0, "host_s": 0.0, "stage_s": 0.0, "dispatch_s": 0.0,
+            "device_s": 0.0, "sync_s": 0.0, "full_reseed": 0,
+            "delta_sync": 0, "delta_rows": 0, "carry": 0}
+
+
+class LazyDecision:
+    """An in-flight fused decision: device arrays whose host transfer is
+    deferred until the caller actually needs the values (the dispatch
+    point). `fetch()` blocks on the device program, slices off the
+    shape-padding rows and returns numpy — idempotently, so diagnostics
+    may re-fetch."""
+
+    __slots__ = ("_choice", "_l", "_R", "_stats", "_out")
+
+    def __init__(self, choice, l_chosen, R: int, stats: Dict):
+        self._choice = choice
+        self._l = l_chosen
+        self._R = R
+        self._stats = stats
+        self._out: Optional[Tuple[np.ndarray, np.ndarray]] = None
+
+    def fetch(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._out is None:
+            t0 = time.perf_counter()
+            jax.block_until_ready((self._choice, self._l))
+            t1 = time.perf_counter()
+            self._out = (np.asarray(self._choice[:self._R], np.int64),
+                         np.asarray(self._l[:self._R], np.float64))
+            t2 = time.perf_counter()
+            self._stats["device_s"] += t1 - t0
+            self._stats["sync_s"] += t2 - t1
+        return self._out
 
 
 class FusedHotPath:
@@ -85,10 +130,9 @@ class FusedHotPath:
         return runner
 
     def __init__(self, bundle, instances, cfg):
-        enc = bundle.encoder
+        self._encoder = bundle.encoder      # ingest-time embedding only
         knn = bundle.knn
-        self.max_len = enc.max_len
-        self._encode = enc._encode_impl      # pure fn over device params
+        self._E = bundle.encoder.dim
         self._k = knn.k
         self._eps = knn.eps
         self._x = jnp.asarray(knn._x)
@@ -101,13 +145,14 @@ class FusedHotPath:
             if inst.tier.name not in tier_names:
                 tier_names.append(inst.tier.name)
         heads = [bundle.heads[t] for t in tier_names]
-        # roster size is bucketed to a power of two, like R and L: pad
-        # columns are permanently dead (never admitted, never scored),
-        # so rosters of 65..128 instances share one compiled I=128 shape
+        # roster size is bucketed to a power of two, like R: pad columns
+        # are permanently dead (never admitted, never scored), so
+        # rosters of 65..128 instances share one compiled I=128 shape
         # and the scan geometry stays uniform across scenario sweeps
         I = len(instances)
         self._n_real = I
-        self._Ipad = bucket_pow2(I) - I
+        self._Itot = bucket_pow2(I)
+        self._Ipad = self._Itot - I
         tier_of_i = self._pad_i(np.array(
             [tier_names.index(i.tier.name) for i in instances],
             np.int32))
@@ -142,14 +187,30 @@ class FusedHotPath:
             stacked = pack_ensemble([h.model for h in heads])
             self._gbm = {k: jnp.asarray(v) if isinstance(v, np.ndarray)
                          else v for k, v in stacked.items()}
-        # d/b/free are donated in and returned post-scan; ctx and alive
-        # are read-only (args: tokens 0, mask 1, row_valid 2, budgets 3,
-        # len_in 4, d 5, b 6, free 7, ctx 8, alive 9)
-        self._step = jax.jit(self._step_impl, donate_argnums=(5, 6, 7))
-        self._state: Optional[Tuple] = None   # (d, b, free) device arrays
-        self._ctx_dev = None
-        self._alive_dev = None
-        self._seen_version = -1
+        # the telemetry mirror (d, b, free, ctx) is donated in and the
+        # refreshed (pre-scan) mirror comes back out, so it chains
+        # batch-to-batch on device; alive is read-only (re-uploaded on
+        # roster events). args: emb 0, row_valid 1, budgets 2, len_in 3,
+        # d 4, b 5, free 6, ctx 7, alive 8, delta idx/d/b/free/ctx 9-13
+        self._step = jax.jit(self._step_impl, donate_argnums=(4, 5, 6, 7))
+        # the delta lane count is FIXED at one pow2 capacity (≥ the
+        # mostly-dirty threshold where _sync_state reseeds instead), so
+        # full-reseed, carry and every delta sync share one compiled
+        # shape per R bucket — K never adds a compile dimension, and
+        # warming the R buckets warms everything. Unused lanes carry
+        # out-of-range indices and drop in the scatter.
+        self._Kcap = bucket_pow2(max(8, (self._n_real + 1) // 2))
+        self._empty_delta = (
+            np.full(self._Kcap, self._Itot, np.int32),
+            np.zeros(self._Kcap, np.float32),
+            np.zeros(self._Kcap, np.float32),
+            np.zeros(self._Kcap, np.float32),
+            np.zeros(self._Kcap, np.float32))
+        self._stage: Dict[int, list] = {}    # Rb -> [bufset, bufset]
+        self._sflip: Dict[int, int] = {}
+        self._dstage: Optional[list] = None  # [bufset, bufset]
+        self._dflip = 0
+        self.reset()                         # also installs fresh stats
 
     def _pad_i(self, x: np.ndarray, fill=0) -> np.ndarray:
         """Pad an (I,) per-instance vector out to the pow2 roster
@@ -160,16 +221,28 @@ class FusedHotPath:
             [x, np.full(self._Ipad, fill, x.dtype)])
 
     # -- traced body --------------------------------------------------------
-    def _step_impl(self, tokens, mask, row_valid, budgets, len_in,
-                   d, b, free, ctx, alive):
-        # 1. prompt-intrinsic estimation: encoder + KNN top-k, all models
-        emb = self._encode(tokens, mask)
+    def _step_impl(self, emb, row_valid, budgets, len_in,
+                   d, b, free, ctx, alive,
+                   didx, dd, db, dfree, dctx):
+        # 0. incremental telemetry: scatter the dirty rows into the
+        # donated device mirror (pad lanes carry out-of-range indices
+        # and drop). The refreshed mirror is bitwise a full host
+        # re-read — untouched rows' telemetry has not moved since they
+        # were last synced — so this arm preserves the staged backends'
+        # reseed-per-batch semantics exactly.
+        d = d.at[didx].set(dd, mode="drop")
+        b = b.at[didx].set(db, mode="drop")
+        free = free.at[didx].set(dfree, mode="drop")
+        ctx = ctx.at[didx].set(dctx, mode="drop")
+
+        # 1. prompt-intrinsic estimation: KNN top-k over the ingest
+        # embedding column, all models at once
         qual, leng = topk_soft_lookup(emb, self._x, self._xsq,
                                       self._qual, self._leng,
                                       self._k, self._eps)    # (R, M)
         q_inst = qual[:, self._m_of_i]                       # (R, I)
         l_inst = leng[:, self._m_of_i]
-        # pad rows order strictly after every real request (cf. decide())
+        # pad rows order strictly after every real request
         pred_len_max = jnp.where(row_valid, leng.max(axis=1), -1e30)
 
         # 2. state-dependent TPOT: all per-tier heads in one packed gather
@@ -207,60 +280,154 @@ class FusedHotPath:
             self._mode, row_valid=row_valid)
         l_chosen = jnp.take_along_axis(l_inst, choice[:, None],
                                        axis=1)[:, 0]
-        return choice, est_T, l_chosen, d1, b1, f1
+        # the refreshed pre-scan mirror (d, b, free, ctx) is the carried
+        # state; (d1, b1, f1) is the post-scan dead-reckoned view, kept
+        # for diagnostics/invariant checks only — the next batch reseeds
+        # from telemetry just like the staged backends
+        return (choice, est_T, l_chosen, d, b, free, ctx, d1, b1, f1)
 
     # -- host side ----------------------------------------------------------
     def reset(self):
-        """Forget carried device state (new sim / fresh telemetry)."""
-        self._state = None
-        self._ctx_dev = None
+        """Forget carried device state (new sim / fresh roster) and
+        start a fresh stats window, so `stats` reads as per-cell
+        counters rather than accumulating across cache-hit reuses. A
+        `LazyDecision` still in flight keeps a reference to the old
+        window and is unaffected."""
+        self._state: Optional[Tuple] = None   # (d, b, free, ctx) mirror
+        self._post_state: Optional[Tuple] = None   # post-scan (d, b, free)
         self._alive_dev = None
+        self._seen_tel = None                 # identity of the synced view
         self._seen_version = -1
+        self._seen_roster = -1
+        self.stats = _new_stats()
 
-    def _sync_state(self, tel):
-        """Refresh the device state from the array-telemetry view when
-        any instance has iterated since the last batch; otherwise carry
-        the dead-reckoned device buffers forward."""
-        if self._state is None or tel.version != self._seen_version:
-            self._seen_version = tel.version
-            self._state = (
-                jnp.asarray(self._pad_i(np.asarray(tel.pending,
-                                                   np.float32))),
-                jnp.asarray(self._pad_i(np.asarray(tel.batch,
-                                                   np.float32))),
-                jnp.asarray(self._pad_i(np.asarray(tel.free,
-                                                   np.float32))))
-            self._ctx_dev = jnp.asarray(
-                self._pad_i(np.asarray(tel.ctx, np.float32)))
-            # roster-bucket pad columns stay permanently dead
+    def _stage_buffers(self, Rb: int) -> Dict[str, np.ndarray]:
+        """The preallocated host staging set for the pow2 batch bucket.
+        Two sets alternate per bucket so writing batch N+1 can never
+        alias batch N's still-in-flight transfer (the async-dispatch
+        window is one batch deep)."""
+        pair = self._stage.get(Rb)
+        if pair is None:
+            def mk():
+                return {"emb": np.zeros((Rb, self._E), np.float32),
+                        "prow": np.zeros(Rb, np.int32),
+                        "budgets": np.full(Rb, np.nan, np.float32),
+                        "len_in": np.zeros(Rb, np.float32),
+                        "rv": np.zeros(Rb, bool)}
+            pair = self._stage[Rb] = [mk(), mk()]
+            self._sflip[Rb] = 0
+        self._sflip[Rb] ^= 1
+        return pair[self._sflip[Rb]]
+
+    def _delta_buffers(self) -> Dict[str, np.ndarray]:
+        if self._dstage is None:
+            def mk():
+                return {"idx": np.full(self._Kcap, self._Itot, np.int32),
+                        "d": np.zeros(self._Kcap, np.float32),
+                        "b": np.zeros(self._Kcap, np.float32),
+                        "free": np.zeros(self._Kcap, np.float32),
+                        "ctx": np.zeros(self._Kcap, np.float32)}
+            self._dstage = [mk(), mk()]
+        self._dflip ^= 1
+        return self._dstage[self._dflip]
+
+    def _sync_state(self, tel) -> Tuple:
+        """Assemble the telemetry-state args for `_step`: the carried
+        device mirror plus a dirty-row delta, or a full reseed.
+
+        Full reseed happens only on the first batch, after `reset()`,
+        on roster-shape events (`tel.roster_version` moved: a fail or
+        recover flipped the alive mask), or when most of the roster is
+        dirty (the scatter would cost more than the re-upload). The
+        common steady-state case is the delta arm: only rows with
+        ``tel.last_write > seen_version`` are shipped. Either way the
+        state handed to the scan equals the staged backends' fresh host
+        read of `tel` bit for bit — which is what keeps the fused
+        backend in exact assignment parity (regression-tested in
+        ``tests/test_ingest.py``; the PR-2 semantics of carrying
+        post-scan dead-reckoned state across batches did NOT have this
+        property and is gone)."""
+        st = self.stats
+        rows = None
+        # freshness is keyed to the telemetry OBJECT, not just its
+        # counters: a caller that swaps in a new sim's TelemetryArrays
+        # (rb.sim = ClusterSim(...) without attach()) must reseed — the
+        # new view's counters can look "older" than the mirror's and
+        # would otherwise silently carry the previous cluster's state
+        if (self._state is not None and tel is self._seen_tel
+                and tel.roster_version == self._seen_roster):
+            rows = tel.dirty_rows(self._seen_version)
+            if 2 * len(rows) > self._n_real:
+                rows = None                  # mostly dirty: reseed outright
+        self._seen_version = tel.version
+        if rows is None:
+            self._seen_tel = tel
+            self._seen_roster = tel.roster_version
+            self._state = tuple(
+                jnp.asarray(self._pad_i(np.asarray(x, np.float32)))
+                for x in (tel.pending, tel.batch, tel.free, tel.ctx))
             self._alive_dev = jnp.asarray(
                 self._pad_i(np.asarray(tel.alive), fill=False))
-        return self._state
+            st["full_reseed"] += 1
+            return self._state + (self._alive_dev,) + self._empty_delta
+        K = len(rows)
+        if K == 0:
+            st["carry"] += 1
+            return self._state + (self._alive_dev,) + self._empty_delta
+        st["delta_sync"] += 1
+        st["delta_rows"] += K
+        buf = self._delta_buffers()
+        buf["idx"][:K] = rows
+        buf["idx"][K:] = self._Itot          # out-of-range -> dropped
+        buf["d"][:K] = tel.pending[rows]
+        buf["b"][:K] = tel.batch[rows]
+        buf["free"][:K] = tel.free[rows]
+        buf["ctx"][:K] = tel.ctx[rows]
+        return self._state + (self._alive_dev, buf["idx"], buf["d"],
+                              buf["b"], buf["free"], buf["ctx"])
+
+    def decide_cols(self, cols, rows: np.ndarray, tel) -> LazyDecision:
+        """One scheduler batch as a row slice into the SoA ingest
+        columns: stage via vectorized gathers into the preallocated
+        double-buffered host set, sync the device telemetry mirror
+        (delta scatter in the common case), dispatch the single fused
+        program, and hand back a `LazyDecision` so the caller's host
+        work overlaps device execution."""
+        assert cols.emb is not None, \
+            "RequestColumns.ensure_embeddings must run before decide"
+        st = self.stats
+        st["calls"] += 1
+        t0 = time.perf_counter()
+        R = len(rows)
+        s = self._stage_buffers(bucket_pow2(R))
+        np.take(cols.prompt_row, rows, out=s["prow"][:R])
+        np.take(cols.emb, s["prow"][:R], axis=0, out=s["emb"][:R])
+        s["emb"][R:] = 0.0
+        s["budgets"][:R] = cols.budget[rows]
+        s["budgets"][R:] = np.nan
+        s["len_in"][:R] = cols.len_in[rows]
+        s["len_in"][R:] = 0.0
+        s["rv"][:R] = True
+        s["rv"][R:] = False
+        t1 = time.perf_counter()
+        state_args = self._sync_state(tel)
+        t2 = time.perf_counter()
+        out = self._step(s["emb"], s["rv"], s["budgets"], s["len_in"],
+                         *state_args)
+        self._state = out[3:7]               # refreshed pre-scan mirror
+        self._post_state = out[7:10]         # post-scan (diagnostics)
+        t3 = time.perf_counter()
+        st["stage_s"] += t1 - t0
+        st["host_s"] += t2 - t0
+        st["dispatch_s"] += t3 - t2
+        return LazyDecision(out[0], out[2], R, st)
 
     def decide(self, batch, tel) -> Tuple[np.ndarray, np.ndarray]:
-        """batch: requests; tel: ClusterSim.tel. Returns (choice (R,)
-        int64 indexing the FULL instance roster, l_chosen (R,))."""
-        R = len(batch)
-        lens = np.minimum([len(r.prompt.tokens) for r in batch],
-                          self.max_len)
-        Lb = min(bucket_pow2(int(lens.max())), self.max_len)
-        Rb = bucket_pow2(R)
-        toks = np.zeros((Rb, Lb), np.int32)
-        toks[:R] = pad_tokens([r.prompt.tokens for r in batch], Lb)
-        lens_p = np.zeros(Rb, np.int64)
-        lens_p[:R] = lens
-        mask = np.arange(Lb)[None, :] < lens_p[:, None]
-        row_valid = np.arange(Rb) < R
-        budgets = np.full(Rb, np.nan, np.float32)
-        budgets[:R] = [np.nan if r.budget is None else r.budget
-                       for r in batch]
-        len_in = np.zeros(Rb, np.float32)
-        len_in[:R] = [r.prompt.len_in for r in batch]
-
-        d, b, free = self._sync_state(tel)
-        choice, est_T, l_chosen, d1, b1, f1 = self._step(
-            toks, mask, row_valid, budgets, len_in, d, b, free,
-            self._ctx_dev, self._alive_dev)
-        self._state = (d1, b1, f1)          # dead-reckoned carry
-        return (np.asarray(choice[:R], np.int64),
-                np.asarray(l_chosen[:R], np.float64))
+        """Legacy AoS entry (direct callers, tests): derive the column
+        slice from the request list — ephemeral non-stamping columns if
+        the batch has no shared stream — then fetch eagerly. Returns
+        (choice (R,) int64 indexing the FULL instance roster, l_chosen
+        (R,))."""
+        from repro.serving.request import RequestColumns
+        cols, rows = RequestColumns.for_batch(batch, self._encoder)
+        return self.decide_cols(cols, rows, tel).fetch()

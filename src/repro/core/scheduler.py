@@ -84,13 +84,28 @@ class EstimatorBundle:
                 t.name, nominal_tpot=t.tpot(8, 500)).fit(X, y)
         return EstimatorBundle(enc, knn, heads, model_names)
 
-    def predict_prompts(self, reqs: Sequence[Request]
+    def predict_prompts(self, reqs: Sequence[Request], cols=None,
+                        rows: Optional[np.ndarray] = None
                         ) -> Tuple[np.ndarray, np.ndarray]:
-        toks = pad_tokens([r.prompt.tokens for r in reqs],
-                          self.encoder.max_len)
-        lens = np.array([min(len(r.prompt.tokens), self.encoder.max_len)
-                         for r in reqs])
-        emb = self.encoder.encode(toks, lens)
+        """Batched Q̂/L̂ for a request batch. When the batch is a slice
+        of a SoA ingest stream (`repro.serving.request.RequestColumns`)
+        the encoder is skipped entirely — the memoized per-prompt
+        embedding column is gathered instead (bitwise the per-batch
+        encode, which is padding-stable) — so the staged numpy/jax
+        backends share the fused path's ingest win and the differential
+        harness keeps comparing like for like."""
+        if cols is None:
+            from repro.serving.request import batch_columns
+            cols, rows = batch_columns(reqs)
+        if cols is not None:
+            cols.ensure_embeddings(self.encoder)
+            emb = cols.emb[cols.prompt_row[rows]]
+        else:
+            toks = pad_tokens([r.prompt.tokens for r in reqs],
+                              self.encoder.max_len)
+            lens = np.array([min(len(r.prompt.tokens),
+                                 self.encoder.max_len) for r in reqs])
+            emb = self.encoder.encode(toks, lens)
         return self.knn.query(emb)
 
 
@@ -104,6 +119,20 @@ def _tier_sweep(tier: Tier, rng) -> Tuple[np.ndarray, np.ndarray]:
         rows.append(tpot_features(b, pend, ctx))
         ys.append(tier.tpot(b, ctx) * np.exp(rng.normal(0, 0.03)))
     return np.stack(rows), np.asarray(ys, np.float32)
+
+
+class _Ready:
+    """Already-materialized decision result: the staged backends' twin
+    of `repro.core.hotpath.LazyDecision`, so `_decide` fetches through
+    one interface regardless of backend."""
+
+    __slots__ = ("_out",)
+
+    def __init__(self, choice: np.ndarray, l_chosen: np.ndarray):
+        self._out = (choice, l_chosen)
+
+    def fetch(self):
+        return self._out
 
 
 class RouteBalance:
@@ -136,15 +165,54 @@ class RouteBalance:
         self.expected: Optional[int] = None   # stop firing once all served
         self.compute_log: List[Tuple[int, float]] = []
         self._fused = None                    # lazily-built FusedHotPath
+        # the waiting queue's SoA twin: a row-index buffer parallel to
+        # `self.waiting`, so a decision batch is an index slice into the
+        # stream's RequestColumns with no per-request work at fire time.
+        # _wait_cols: the stream's columns | None (queue empty) | False
+        # (mixed/columnless stream -> legacy AoS marshaling)
+        self._wait_rows = np.empty(256, np.int64)
+        self._wait_start = 0
+        self._wait_n = 0
+        self._wait_cols = None
 
     # -- wiring ---------------------------------------------------------------
     def attach(self, sim: ClusterSim):
         self.sim = sim
         self._fused = None                    # new sim -> new roster
+        self._wait_start = self._wait_n = 0
+        # requests queued from before a re-attach have no rows in the
+        # (just-cleared) ring, so the ring is no longer parallel to
+        # `waiting` — marshal AoS until the queue drains (`_fire`'s
+        # drain reset re-enables the SoA path)
+        self._wait_cols = False if self.waiting else None
         sim.push(self.cfg.base_window, self._fire)
 
     def enqueue(self, req: Request, t: float):
         self.waiting.append(req)
+        cols = req.cols
+        if cols is None or req.row < 0 or (
+                self._wait_cols is not None
+                and self._wait_cols is not cols):
+            self._wait_cols = False           # fall back to AoS marshaling
+            return
+        if self._wait_cols is None:
+            # first sight of the stream: fill the embedding column now
+            # (ingest time, off the measured decision path; a no-op when
+            # the workload generator pre-embedded)
+            cols.ensure_embeddings(self.bundle.encoder)
+            self._wait_cols = cols
+        end = self._wait_start + self._wait_n
+        if end >= len(self._wait_rows):
+            if self._wait_start:              # compact, then maybe grow
+                self._wait_rows[:self._wait_n] = \
+                    self._wait_rows[self._wait_start:end].copy()
+                self._wait_start = 0
+                end = self._wait_n
+            if end >= len(self._wait_rows):
+                self._wait_rows = np.concatenate(
+                    [self._wait_rows, np.empty_like(self._wait_rows)])
+        self._wait_rows[end] = req.row
+        self._wait_n += 1
 
     # -- scheduling -----------------------------------------------------------
     def _window(self) -> float:
@@ -163,9 +231,19 @@ class RouteBalance:
         if self.cfg.fixed_batch:
             batch = batch[:self.cfg.fixed_batch]
         self.waiting = self.waiting[len(batch):]
+        k = len(batch)
+        cols = rows = None
+        if self._wait_cols not in (None, False):
+            cols = self._wait_cols
+            rows = self._wait_rows[self._wait_start:self._wait_start + k]
+            self._wait_start += k
+            self._wait_n -= k
+        if not self.waiting:                  # drained: accept a new
+            self._wait_start = self._wait_n = 0   # stream (or recover
+            self._wait_cols = None                # from a mixed one)
         if batch:
             t0 = time.perf_counter()
-            self._decide(batch, t)
+            self._decide(batch, t, cols, rows)
             dt_meas = time.perf_counter() - t0
             self._measured_compute = (0.8 * self._measured_compute
                                       + 0.2 * dt_meas)
@@ -180,44 +258,71 @@ class RouteBalance:
         """The pure per-batch decision (no dispatch): returns the
         candidate roster plus (choice (R,) indices into it, l_chosen
         (R,) predicted length at the chosen instance). This is the hot
-        path `benchmarks/hotpath.py` measures."""
-        if self.cfg.decision_backend == "fused":
-            return self._decide_fused(batch)
-        return self._decide_staged(batch)
+        path `benchmarks/hotpath.py` measures; it fetches eagerly —
+        the production `_decide` defers the fetch to the dispatch
+        point instead."""
+        instances, res = self._decide_lazy(batch)
+        choice, l_chosen = res.fetch()
+        return instances, choice, l_chosen
 
-    def _decide_fused(self, batch: List[Request]):
+    def _decide_lazy(self, batch: List[Request], cols=None,
+                     rows: Optional[np.ndarray] = None):
+        """Dispatch the per-batch decision; returns (instances, result)
+        where result.fetch() materializes (choice, l_chosen). The fused
+        backend's result is a LazyDecision (device arrays, deferred
+        transfer); the staged backends' is already numpy."""
+        if self.cfg.decision_backend == "fused":
+            return self._decide_fused(batch, cols, rows)
+        instances, choice, l_chosen = self._decide_staged(batch, cols,
+                                                          rows)
+        return instances, _Ready(choice, l_chosen)
+
+    def _decide_fused(self, batch: List[Request], cols=None,
+                      rows: Optional[np.ndarray] = None):
         """Single-dispatch path: one jitted device program per batch
-        over the full instance roster (dead instances masked)."""
+        over the full instance roster (dead instances masked), staged
+        from the SoA ingest columns."""
         if not self.sim.tel.alive.any():
             raise RuntimeError("no alive instances to schedule onto")
         if self._fused is None:
             from .hotpath import FusedHotPath
             self._fused = FusedHotPath.for_bundle(
                 self.bundle, self.sim.instances, self.cfg)
-        choice, l_chosen = self._fused.decide(batch, self.sim.tel)
-        return self.sim.instances, choice, l_chosen
+        if cols is None:
+            # direct callers (tests, benches): derive the column slice
+            # from the batch, building ephemeral columns if needed
+            from repro.serving.request import RequestColumns
+            cols, rows = RequestColumns.for_batch(batch,
+                                                  self.bundle.encoder)
+        return self.sim.instances, self._fused.decide_cols(
+            cols, rows, self.sim.tel)
 
-    def _decide_staged(self, batch: List[Request]):
+    def _decide_staged(self, batch: List[Request], cols=None,
+                       rows: Optional[np.ndarray] = None):
         cfg = self.cfg
         instances = self.sim.alive_instances()
         I = len(instances)
         R = len(batch)
         m_of_i = np.array([inst.model_idx for inst in instances])
         tiers_of_i = [inst.tier for inst in instances]
+        if cols is None:
+            from repro.serving.request import batch_columns
+            cols, rows = batch_columns(batch)
 
-        # 1. batched prompt-intrinsic estimation (one call)
-        Q, L = self.bundle.predict_prompts(batch)        # (R, M)
+        # 1. batched prompt-intrinsic estimation (one call; the ingest
+        # embedding column skips the encoder when available)
+        Q, L = self.bundle.predict_prompts(batch, cols=cols, rows=rows)
         q_inst = Q[:, m_of_i]                            # (R, I)
         l_inst = L[:, m_of_i]
 
         # 2. telemetry seed from the columnar view (non-blocking)
         tel = self.sim.tel
-        rows = np.flatnonzero(tel.alive)
-        d = tel.pending[rows].copy()
-        b = np.maximum(tel.batch[rows], 1.0)
-        free = tel.free[rows].copy()
-        ctx = np.maximum(tel.ctx[rows], 64.0)
-        maxb = tel.max_batch[rows].copy()
+        alive_rows = np.flatnonzero(tel.alive)
+        d = tel.pending[alive_rows].copy()
+        b = np.maximum(tel.batch[alive_rows], 1.0)
+        free = tel.free[alive_rows].copy()
+        ctx = np.maximum(tel.ctx[alive_rows], 64.0)
+        maxb = tel.max_batch[alive_rows].copy()
 
         # 3. one TPOT-head call per TIER (not per instance)
         tpot = np.zeros(I)
@@ -238,9 +343,13 @@ class RouteBalance:
         # reckoning — either the numpy loop or the jitted decision core
         price_in = np.array([ti.price_in for ti in tiers_of_i])
         price_out = np.array([ti.price_out for ti in tiers_of_i])
-        budgets = np.array([np.nan if r.budget is None else r.budget
-                            for r in batch])
-        len_in = np.array([r.prompt.len_in for r in batch], float)
+        if cols is not None:
+            budgets = cols.budget[rows]
+            len_in = cols.len_in[rows]
+        else:
+            budgets = np.array([np.nan if r.budget is None else r.budget
+                                for r in batch])
+            len_in = np.array([r.prompt.len_in for r in batch], float)
         nominal = np.array([self.bundle.heads[ti.name].nominal_tpot
                             for ti in tiers_of_i])
         if cfg.decision_backend == "jax":
@@ -251,31 +360,45 @@ class RouteBalance:
                 latency_mode=cfg.latency_mode, lpt=cfg.lpt,
                 budget_filter=cfg.budget_filter)
         else:
+            # the reference loop evaluates the decision arithmetic in
+            # float32 — the jitted cores' precision — so the quantized
+            # Eq. 1 tie groups are identical across all three backends
+            # (greedy_assign follows the dtype of its inputs)
+            f32 = np.float32
+            budgets32, len_in32 = budgets.astype(f32), len_in.astype(f32)
+            pi32, po32 = price_in.astype(f32), price_out.astype(f32)
             if cfg.budget_filter:
-                allowed, c_hat = admission_mask(budgets, len_in, l_inst,
-                                                price_in, price_out)
+                allowed, c_hat = admission_mask(budgets32, len_in32,
+                                                l_inst, pi32, po32)
             else:
                 allowed = np.ones((R, I), bool)
-                c_hat = cost_matrix(len_in, l_inst, price_in, price_out)
+                c_hat = cost_matrix(len_in32, l_inst, pi32, po32)
             order = lpt_order(L.max(axis=1), enable=cfg.lpt)
             choice, _ = greedy_assign(
-                order, q_inst, c_hat, l_inst, tpot, d, b, free, maxb,
+                order, q_inst.astype(f32), c_hat, l_inst.astype(f32),
+                tpot.astype(f32), d.astype(f32), b.astype(f32),
+                free.astype(f32), maxb.astype(f32),
                 cfg.weights, allowed, latency_mode=cfg.latency_mode,
-                nominal_tpot=nominal)
+                nominal_tpot=nominal.astype(f32))
         l_chosen = l_inst[np.arange(R), choice]
         return instances, choice, l_chosen
 
-    def _decide(self, batch: List[Request], t: float):
+    def _decide(self, batch: List[Request], t: float, cols=None,
+                rows: Optional[np.ndarray] = None):
         cfg = self.cfg
-        instances, choice, l_chosen = self._decide_core(batch)
+        instances, res = self._decide_lazy(batch, cols, rows)
         R = len(batch)
         I = int(self.sim.tel.alive.sum())
 
-        # 6. dispatch + residual accounting
+        # 6. dispatch + residual accounting. The bookkeeping between
+        # the dispatch above and res.fetch() below runs while the fused
+        # device program executes (async dispatch); the staged backends
+        # fetch here for free (already numpy).
         compute = self._measured_compute if cfg.charge_compute else 0.0
         stats = 0.0005 * I / 13                       # non-blocking fetch
         per_req_compute = compute / max(R, 1) + compute * 0.2
         now = t + compute + stats
+        choice, l_chosen = res.fetch()
         for r_idx, req in enumerate(batch):
             i = int(choice[r_idx])
             inst = instances[i]

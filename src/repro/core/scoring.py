@@ -4,16 +4,54 @@ maxima (the batch supplies the reference set a point-at-a-time router
 lacks; §4.1).
 
 The math lives in one backend-agnostic function (`masked_score`) shared
-by the numpy production loop and the jitted JAX decision core
-(`repro.core.decision_jax`) — exact-parity differential tests depend on
-both backends evaluating the identical expression in the identical
-operation order.
+by the numpy production loop and the jitted JAX decision cores
+(`repro.core.decision_jax`, `repro.core.hotpath`) — exact-parity
+differential tests depend on every backend evaluating the identical
+expression in the identical operation order.
+
+Scores are **epsilon-quantized** before they are returned: snapped to a
+2^-13 grid (~1.2e-4 of the O(1) score scale). Two candidates whose
+scores are equal in real arithmetic — same-tier replicas in identical
+dead-reckoned state, the common case on a live cluster — used to come
+back with a sub-1e-7 noise gap that the numpy loop's float64 resolved
+and the jitted cores' float32 collapsed (or vice versa), flipping the
+argmax between backends on unlucky worlds. Three coordinated choices
+make the backends agree instead: the scheduler's numpy reference now
+evaluates the decision arithmetic in float32 (`greedy_assign` follows
+its input dtype, so the T/score chains are bitwise the jitted cores'),
+the cost scale is a reciprocal multiply rather than a division
+(matching XLA's rewrite), and quantization absorbs the one residual
+cross-backend difference — XLA's FMA contraction of the cost mul-add,
+~1 ulp — by collapsing every sub-quantum gap to an exact tie in both
+precisions (the pow2 scale makes the snap itself exact in either float
+width). Ties break deterministically by candidate index in all
+backends, so the three-way randomized soak holds on every seed with no
+pinned exclusions (`tests/test_soak.py`). Gaps that matter — actual
+quality/cost/latency differences, O(1e-3) and up — sit a thousand
+quanta apart and are untouched.
 """
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
+
+# pow2 quantum: s * 2^13 only shifts the exponent, so the snap is exact
+# in both float32 and float64 and the two precisions land on the same
+# grid point for any sub-quantum disagreement. 2^-13 ~ 1.2e-4 sits far
+# below meaningful score signal (KNN quality noise is 0.14, TPOT heads
+# carry ~3% error, weighted differences that matter are O(1e-2)) and
+# ~1000x above float32 evaluation noise, so near-tie straddles of a
+# grid boundary — the residual cross-precision flip mode — are rare
+# enough that the randomized soak holds on every seed.
+SCORE_QUANTUM = 2.0 ** -13
+_INV_QUANTUM = 2.0 ** 13
+
+
+def quantize_scores(s, xp=np):
+    """Snap Eq. 1 scores to the shared epsilon grid (round half to even
+    in both numpy and jax). -inf (masked candidates) passes through."""
+    return xp.round(s * _INV_QUANTUM) * SCORE_QUANTUM
 
 
 def masked_score(q, c, t, weights, mask, xp=np):
@@ -23,7 +61,8 @@ def masked_score(q, c, t, weights, mask, xp=np):
     candidate instances; weights = (w_qual, w_lat, w_cost); xp is the
     array namespace (numpy or jax.numpy). Cost and latency are
     normalized per request by the max over *allowed* candidates;
-    disallowed pairs come back -inf.
+    disallowed pairs come back -inf. Scores are epsilon-quantized (see
+    module docstring) so float32 and float64 evaluations agree exactly.
     """
     wq, wl, wc = weights
     neg = -xp.inf
@@ -32,7 +71,7 @@ def masked_score(q, c, t, weights, mask, xp=np):
     tmax = xp.maximum(
         xp.max(xp.where(mask, t, neg), axis=-1, keepdims=True), 1e-12)
     s = wq * q + wc * (1.0 - c / cmax) + wl * (1.0 - t / tmax)
-    return xp.where(mask, s, neg)
+    return xp.where(mask, quantize_scores(s, xp), neg)
 
 
 def score_matrix(q_hat: np.ndarray, c_hat: np.ndarray, t_hat: np.ndarray,

@@ -41,9 +41,23 @@ class TelemetryArrays:
     the paper describes; this is the scheduler-side columnar view of the
     same numbers, written in place at iteration boundaries so the hot
     path reads (I,) arrays instead of marshalling one dict per instance
-    per batch. `version` bumps on every write — the fused hot path uses
-    it to decide whether its device-resident dead-reckoned state must be
-    refreshed or can be carried forward.
+    per batch.
+
+    Incremental consumers (the fused hot path's device-resident state
+    mirror) track two counters plus a per-row stamp instead of copying
+    the whole view every batch:
+
+      * `version` bumps on every write; `last_write[slot]` records the
+        version at which each row last changed, so a reader that synced
+        at version v refreshes exactly the rows with
+        ``last_write > v`` — a handful of scatter rows per batch instead
+        of a full (I,)x5 re-upload;
+      * `roster_version` bumps only on roster-shape events (kill /
+        revive). Those flip the alive mask, which incremental readers
+        keep device-resident, so they fall back to a full reseed.
+
+    Bulk in-place edits of the columns (test fixtures, benchmarks) must
+    call `mark_all_dirty()` so stamp-based readers see them.
     """
 
     def __init__(self, instances: List["Instance"]):
@@ -58,6 +72,8 @@ class TelemetryArrays:
                                   float)
         self.alive = np.ones(I, bool)
         self.version = 0
+        self.roster_version = 0
+        self.last_write = np.zeros(I, np.int64)     # version stamp per row
 
     def write(self, slot: int, pending: float, batch: int, free: int,
               ctx: float, queue: int, t: float):
@@ -68,15 +84,28 @@ class TelemetryArrays:
         self.queue[slot] = queue
         self.t[slot] = t
         self.version += 1
+        self.last_write[slot] = self.version
+
+    def dirty_rows(self, since: int) -> np.ndarray:
+        """Rows written after version `since` (ascending slot order)."""
+        return np.flatnonzero(self.last_write > since)
+
+    def mark_all_dirty(self):
+        """Stamp every row as freshly written — required after editing
+        the columns in place (rather than through `write`)."""
+        self.version += 1
+        self.last_write[:] = self.version
 
     def kill(self, slot: int):
         self.alive[slot] = False
         self.version += 1
+        self.roster_version += 1
 
     def revive(self, slot: int, t: float):
         """Recovered instance re-enters the roster with a clean slate
         (it lost all running/queued work when it failed)."""
         self.alive[slot] = True
+        self.roster_version += 1
         self.write(slot, pending=0.0, batch=0, free=int(self.max_batch[slot]),
                    ctx=0.0, queue=0, t=t)
 

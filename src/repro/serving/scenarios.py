@@ -41,7 +41,7 @@ import numpy as np
 from .cluster import ClusterSim
 from .request import Request
 from .tiers import Tier, paper_pool_tiers
-from .workload import make_arrivals
+from .workload import make_arrivals, sample_budgets
 from .world import TOPICS, Dataset, World, build_dataset, paper_world
 
 
@@ -150,19 +150,20 @@ def build_requests(ds: Dataset, tenants: Tuple[TenantSpec, ...], n: int,
                             **dict(ten.arrival_kw))
         pool = _tenant_prompt_pool(prompts, ten)
         picks = rng.choice(pool, n_t, replace=True)
-        has_b = rng.uniform(size=n_t) < ten.budget_frac
         lo, hi = ten.budget_range
-        budgets = np.exp(rng.uniform(np.log(lo), np.log(hi), n_t))
+        budgets = sample_budgets(n_t, ten.budget_frac, lo, hi, rng=rng)
         for i in range(n_t):
             j = int(picks[i])
             reqs.append(Request(
                 rid=0, prompt=prompts[j], arrival=float(arr[i]),
                 true_quality=Q[j], true_length=L[j],
-                budget=float(budgets[i]) if has_b[i] else None,
+                budget=None if np.isnan(budgets[i]) else float(budgets[i]),
                 tenant=ten.name))
     reqs.sort(key=lambda r: r.arrival)
     for i, r in enumerate(reqs):
         r.rid = i
+    from .request import RequestColumns
+    RequestColumns.from_requests(reqs)
     return reqs
 
 
@@ -226,7 +227,7 @@ def randomize_telemetry(sim: ClusterSim, seed: int,
     tel.batch[:] = rng.integers(0, 12, I)
     tel.free[:] = rng.integers(0, 6, I)
     tel.ctx[:] = rng.uniform(0, 2048, I)
-    tel.version += 1
+    tel.mark_all_dirty()          # in-place edit: stamp every row
     if kill_frac:
         k = min(int(round(kill_frac * I)), I - 1)
         for inst in rng.choice(sim.instances, k, replace=False):

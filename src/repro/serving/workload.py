@@ -60,6 +60,20 @@ def flash_crowd_arrivals(lam: float, n: int, burst_start: float = 20.0,
     return np.asarray(out)
 
 
+def sample_budgets(n: int, frac: float, lo: float = 2e-5, hi: float = 4e-4,
+                   seed=0, rng: np.random.Generator = None) -> np.ndarray:
+    """Vectorized per-request budget mix: each request independently
+    carries a log-uniform USD budget in [lo, hi] with probability
+    `frac`, nan otherwise (nan = unconstrained, the column convention of
+    `repro.serving.request.RequestColumns`). One draw per stream at
+    workload-generation time — budgets are ingest data, not per-request
+    hot-path work."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    has = rng.uniform(size=n) < frac
+    vals = np.exp(rng.uniform(np.log(lo), np.log(hi), n))
+    return np.where(has, vals, np.nan)
+
+
 ARRIVAL_KINDS = ("poisson", "gamma", "square", "flash")
 
 

@@ -75,9 +75,11 @@ def test_fused_batch_bucketing_parity(small_ctx):
 
 
 def test_fused_carried_state_ignores_pad_rows(small_ctx):
-    """R buckets to a power of two; the carried dead-reckoned device
+    """R buckets to a power of two; the post-scan dead-reckoned device
     state must reflect only the real requests' dispatches, never the
-    shape-padding rows'."""
+    shape-padding rows'. The *carried* state (the telemetry mirror) must
+    equal the host telemetry exactly — the delta path's reseed-per-batch
+    contract."""
     R = 13                                    # buckets to 16 -> 3 pads
     batch = _batch(small_ctx, R=R, with_budgets=False)
     rb = RouteBalance(RBConfig(decision_backend="fused"),
@@ -86,11 +88,17 @@ def test_fused_carried_state_ignores_pad_rows(small_ctx):
     tel = rb.sim.tel
     d0, free0 = tel.pending.sum(), tel.free.sum()
     _, choice, l_chosen = rb._decide_core(batch)
-    d1, b1, f1 = (np.asarray(x, np.float64) for x in rb._fused._state)
+    d1, b1, f1 = (np.asarray(x, np.float64)
+                  for x in rb._fused._post_state)
     # pending grew by exactly the real rows' predicted lengths
     np.testing.assert_allclose(d1.sum() - d0, l_chosen.sum(), rtol=1e-5)
     # at most R free slots were consumed
     assert free0 - f1.sum() <= R
+    # the carried mirror is the (f32) telemetry, not the post-scan state
+    I = len(rb.sim.instances)
+    dm, bm, fm, cm = (np.asarray(x)[:I] for x in rb._fused._state)
+    np.testing.assert_array_equal(dm, tel.pending.astype(np.float32))
+    np.testing.assert_array_equal(fm, tel.free.astype(np.float32))
 
 
 def test_fused_masks_dead_instances(small_ctx):

@@ -1,0 +1,342 @@
+"""Zero-allocation host path: SoA ingest, staging-buffer reuse,
+incremental telemetry deltas, and async double-buffered dispatch.
+
+Four contracts from the host-path rebuild (PR 4):
+
+  * **ingest** — `RequestColumns` mirrors the AoS request fields
+    exactly (dtypes included), the memoized per-prompt embedding column
+    is bitwise the per-batch encode it replaces, and `Request.budget`
+    writes through to its column so post-ingest edits stay coherent;
+  * **staging reuse** — the per-pow2(R)-bucket host staging buffers are
+    double buffered: dispatching batch B must not corrupt batch A's
+    still-unfetched `LazyDecision`, across same-bucket and
+    cross-bucket sequences;
+  * **delta telemetry** — `FusedHotPath._sync_state`'s dirty-row
+    scatter must reproduce a from-scratch full reseed (the staged
+    backends' reseed-per-batch semantics) assignment-for-assignment,
+    with the delta/carry arms the steady-state common case and full
+    reseed reserved for roster-shape events and mostly-dirty batches;
+  * **async dispatch** — deferring the result fetch to the dispatch
+    point changes nothing observable: full cluster runs through an
+    explicit fail/straggle/recover `FailureEvent` schedule land on the
+    staged backends' exact trajectories.
+"""
+import numpy as np
+import pytest
+
+from repro.core import RBConfig, RouteBalance, make_requests, run_cell
+from repro.core.hotpath import FusedHotPath
+from repro.serving.cluster import ClusterSim
+from repro.serving.request import RequestColumns, batch_columns
+from repro.serving.scenarios import FailureEvent, randomize_telemetry
+from repro.serving.workload import poisson_arrivals
+
+
+def _loaded_sim(ctx, seed=9, kill_frac=0.0):
+    return randomize_telemetry(
+        ClusterSim(ctx["tiers"], ctx["names"], seed=0), seed, kill_frac)
+
+
+def _batch(ctx, R=16, seed=5, with_budgets=True):
+    reqs = make_requests(ctx["ds"], "test", np.zeros(R))
+    if with_budgets:
+        rng = np.random.default_rng(seed)
+        budgets = np.where(rng.uniform(size=R) < 0.5,
+                           rng.uniform(1e-5, 3e-4, R), np.nan)
+        for r, b in zip(reqs, budgets):
+            r.budget = None if np.isnan(b) else float(b)
+    return reqs
+
+
+def _runner(ctx, sim, **cfg_kw):
+    """A private FusedHotPath (not the for_bundle cache — tests here
+    need two independent runners against one telemetry view)."""
+    return FusedHotPath(ctx["bundle"], sim.instances,
+                        RBConfig(decision_backend="fused", **cfg_kw))
+
+
+# -- SoA ingest ---------------------------------------------------------------
+
+def test_request_columns_mirror_aos_fields(small_ctx):
+    reqs = _batch(small_ctx, R=24, seed=3)
+    cols = reqs[0].cols
+    assert cols is not None and cols.n == 24
+    for i, r in enumerate(reqs):
+        assert r.cols is cols and r.row == i
+        assert cols.len_in[i] == r.prompt.len_in
+        if r.budget is None:
+            assert np.isnan(cols.budget[i])
+        else:
+            assert cols.budget[i] == r.budget
+        p = cols.prompt_row[i]
+        n_tok = min(len(r.prompt.tokens), cols.tokens.shape[1])
+        assert cols.tok_len[p] == n_tok
+        np.testing.assert_array_equal(cols.tokens[p, :n_tok],
+                                      r.prompt.tokens[:n_tok])
+    # prompt deduplication: the token matrix has one row per unique
+    # prompt object, not one per request
+    assert len(cols.tokens) == len({id(r.prompt) for r in reqs})
+
+
+def test_budget_edit_writes_through_to_column(small_ctx):
+    reqs = _batch(small_ctx, R=4, with_budgets=False)
+    cols = reqs[0].cols
+    assert np.isnan(cols.budget[1])
+    reqs[1].budget = 2.5e-4
+    assert cols.budget[1] == 2.5e-4
+    reqs[1].budget = None
+    assert np.isnan(cols.budget[1])
+
+
+def test_batch_columns_rejects_mixed_streams(small_ctx):
+    s1 = _batch(small_ctx, R=6, with_budgets=False)
+    s2 = _batch(small_ctx, R=6, with_budgets=False)
+    cols, rows = batch_columns(s1[:3] + s2[:3])
+    assert cols is None and rows is None
+    cols, rows = batch_columns(s1[2:5])
+    assert cols is s1[0].cols
+    np.testing.assert_array_equal(rows, [2, 3, 4])
+    assert batch_columns([]) == (None, None)
+
+
+def test_ingest_embeddings_bitwise_match_batch_encode(small_ctx):
+    from repro.estimators.embedding import pad_tokens
+    enc = small_ctx["bundle"].encoder
+    reqs = _batch(small_ctx, R=24, seed=7, with_budgets=False)
+    cols = reqs[0].cols.ensure_embeddings(enc)
+    toks = pad_tokens([r.prompt.tokens for r in reqs], enc.max_len)
+    lens = np.array([min(len(r.prompt.tokens), enc.max_len)
+                     for r in reqs])
+    batch_emb = np.asarray(enc.encode(toks, lens))
+    np.testing.assert_array_equal(cols.emb[cols.prompt_row], batch_emb)
+
+
+def test_predict_prompts_gather_matches_encode_path(small_ctx):
+    bundle = small_ctx["bundle"]
+    reqs = _batch(small_ctx, R=12, with_budgets=False)
+    Q1, L1 = bundle.predict_prompts(reqs)          # ingest gather path
+    for r in reqs:                                 # strip -> legacy AoS
+        r.cols, r.row = None, -1
+    Q2, L2 = bundle.predict_prompts(reqs)
+    np.testing.assert_array_equal(np.asarray(Q1), np.asarray(Q2))
+    np.testing.assert_array_equal(np.asarray(L1), np.asarray(L2))
+
+
+# -- staging-buffer reuse / async dispatch ------------------------------------
+
+def test_staging_double_buffer_no_alias(small_ctx):
+    """Write batch A, dispatch, overwrite the bucket with batch B (and a
+    different bucket with C) while A is still in flight: every fetched
+    result must equal an independent eager decide. R=13 and R=10 share
+    the 16 bucket (forcing the flip); R=5 lands in the 8 bucket."""
+    sim = _loaded_sim(small_ctx)
+    fp = _runner(small_ctx, sim)
+    ref = _runner(small_ctx, sim)
+    enc = small_ctx["bundle"].encoder
+    batches = [_batch(small_ctx, R=R, seed=R) for R in (13, 10, 5)]
+    lazies = []
+    for b in batches:                     # dispatch all, fetch nothing
+        cols, rows = batch_columns(b)
+        cols.ensure_embeddings(enc)
+        lazies.append(fp.decide_cols(cols, rows, sim.tel))
+    # telemetry never moved: first call reseeds, the rest carry
+    assert fp.stats["full_reseed"] == 1 and fp.stats["carry"] == 2
+    for b, lz in zip(batches, lazies):
+        choice, l_chosen = lz.fetch()
+        c_ref, l_ref = ref.decide(b, sim.tel)
+        np.testing.assert_array_equal(choice, c_ref)
+        np.testing.assert_array_equal(l_chosen, l_ref)
+    # fetch is idempotent (diagnostics may re-read)
+    again = lazies[0].fetch()
+    np.testing.assert_array_equal(again[0], ref.decide(batches[0],
+                                                       sim.tel)[0])
+
+
+def test_async_dispatch_parity_through_failure_schedule(small_ctx):
+    """Full cluster runs through an explicit fail -> straggle -> recover
+    schedule: the async fused path (lazy fetch at the dispatch point)
+    must land on the staged backends' exact trajectories."""
+    schedule = (FailureEvent(t=1.0, kind="fail", count=3),
+                FailureEvent(t=2.5, kind="straggle", frac=0.25,
+                             factor=3.0),
+                FailureEvent(t=4.0, kind="recover", count=3))
+
+    def cell(backend):
+        reqs = make_requests(small_ctx["ds"], "test",
+                             poisson_arrivals(12.0, 60, seed=11))
+        rb = RouteBalance(RBConfig(decision_backend=backend,
+                                   charge_compute=False),
+                          small_ctx["bundle"], small_ctx["tiers"])
+        m = run_cell(rb, small_ctx["tiers"], small_ctx["names"], reqs,
+                     seed=0, schedule=schedule, schedule_seed=7)
+        return [r.instance for r in reqs], m
+
+    traj = {be: cell(be) for be in ("numpy", "jax", "fused")}
+    assert traj["fused"][0] == traj["jax"][0] == traj["numpy"][0]
+    for k in ("quality", "mean_e2e", "cost_per_req", "goodput"):
+        assert traj["fused"][1][k] == pytest.approx(
+            traj["numpy"][1][k], rel=1e-9), k
+
+
+# -- incremental telemetry deltas ---------------------------------------------
+
+def test_delta_scatter_reproduces_full_reseed(small_ctx):
+    """After a handful of telemetry writes, the delta arm must make
+    exactly the assignments a from-scratch full reseed makes (the
+    staged backends' reseed-per-batch contract)."""
+    sim = _loaded_sim(small_ctx)
+    tel = sim.tel
+    fp = _runner(small_ctx, sim)
+    fp.decide(_batch(small_ctx, R=16, seed=1), tel)   # seed the mirror
+    assert fp.stats["full_reseed"] == 1
+    for slot in (0, 3, 7):                            # a few dirty rows
+        tel.write(slot, pending=123.0 + slot, batch=4, free=2,
+                  ctx=900.0, queue=1, t=1.0)
+    b2 = _batch(small_ctx, R=16, seed=2)
+    c_delta, l_delta = fp.decide(b2, tel)
+    assert fp.stats["delta_sync"] == 1
+    assert fp.stats["delta_rows"] == 3
+    c_ref, l_ref = _runner(small_ctx, sim).decide(b2, tel)
+    np.testing.assert_array_equal(c_delta, c_ref)
+    np.testing.assert_array_equal(l_delta, l_ref)
+
+
+def test_delta_path_matches_staged_backends_per_batch(small_ctx):
+    """Chained batches with telemetry churn between them: every fused
+    decision off the delta-synced mirror equals the staged numpy/jax
+    decision off a fresh host read."""
+    sim_f = _loaded_sim(small_ctx)
+    rb_f = RouteBalance(RBConfig(decision_backend="fused"),
+                        small_ctx["bundle"], small_ctx["tiers"])
+    rb_f.sim = sim_f
+    staged = {}
+    for be in ("numpy", "jax"):
+        staged[be] = RouteBalance(RBConfig(decision_backend=be),
+                                  small_ctx["bundle"],
+                                  small_ctx["tiers"])
+        staged[be].sim = _loaded_sim(small_ctx)
+    rng = np.random.default_rng(0)
+    for step in range(4):
+        batch = _batch(small_ctx, R=12, seed=100 + step)
+        ids = {}
+        for name, rb in [("fused", rb_f)] + list(staged.items()):
+            instances, choice, _ = rb._decide_core(batch)
+            ids[name] = [instances[int(i)].iid for i in choice]
+        assert ids["fused"] == ids["jax"] == ids["numpy"], step
+        slots = rng.choice(len(sim_f.instances), 4, replace=False)
+        for sim in [sim_f] + [s.sim for s in staged.values()]:
+            for slot in slots:                # same writes for every sim
+                sim.tel.write(int(slot), pending=float(50 * step + slot),
+                              batch=3, free=1, ctx=500.0, queue=0,
+                              t=float(step))
+    st = rb_f._fused.stats
+    assert st["delta_sync"] >= 3              # the common case, not dead code
+    assert st["full_reseed"] == 1
+
+
+def test_roster_event_forces_full_reseed(small_ctx):
+    """kill/revive bump `roster_version`; the mirror must full-reseed
+    (the alive mask is device-resident) and keep avoiding dead slots."""
+    sim = _loaded_sim(small_ctx)
+    tel = sim.tel
+    fp = _runner(small_ctx, sim)
+    fp.decide(_batch(small_ctx, R=16, seed=1), tel)
+    dead = sim.instances[2]
+    dead.fail()
+    assert not tel.alive[dead.slot]
+    b2 = _batch(small_ctx, R=16, seed=2)
+    choice, _ = fp.decide(b2, tel)
+    assert fp.stats["full_reseed"] == 2 and fp.stats["delta_sync"] == 0
+    assert dead.slot not in set(int(i) for i in choice)
+    dead.recover(t=1.0)
+    choice, _ = fp.decide(_batch(small_ctx, R=16, seed=3), tel)
+    assert fp.stats["full_reseed"] == 3
+
+
+def test_mostly_dirty_telemetry_reseeds_outright(small_ctx):
+    """When more than half the roster is dirty the scatter would cost
+    more than the re-upload — `_sync_state` reseeds instead."""
+    sim = _loaded_sim(small_ctx)
+    fp = _runner(small_ctx, sim)
+    fp.decide(_batch(small_ctx, R=8, seed=1), sim.tel)
+    sim.tel.mark_all_dirty()
+    b = _batch(small_ctx, R=8, seed=2)
+    c, _ = fp.decide(b, sim.tel)
+    assert fp.stats["full_reseed"] == 2 and fp.stats["delta_sync"] == 0
+    np.testing.assert_array_equal(
+        c, _runner(small_ctx, sim).decide(b, sim.tel)[0])
+
+
+def test_swapped_telemetry_object_forces_reseed(small_ctx):
+    """Swapping in a different sim's TelemetryArrays (rb.sim = ... with
+    no attach()) must full-reseed even though the new view's counters
+    can look 'older' than the mirror's — freshness is keyed to the
+    telemetry object's identity."""
+    sim1 = _loaded_sim(small_ctx, seed=1)
+    sim2 = _loaded_sim(small_ctx, seed=2)
+    fp = _runner(small_ctx, sim1)
+    b = _batch(small_ctx, R=8, seed=1)
+    fp.decide(b, sim1.tel)
+    c, _ = fp.decide(b, sim2.tel)             # same shapes, new object
+    assert fp.stats["full_reseed"] == 2 and fp.stats["carry"] == 0
+    np.testing.assert_array_equal(
+        c, _runner(small_ctx, sim2).decide(b, sim2.tel)[0])
+
+
+def test_reattach_with_queued_requests_falls_back_to_aos(small_ctx):
+    """attach() clears the waiting queue's row ring; requests queued
+    from before the re-attach have no rows in it, so the scheduler must
+    marshal them AoS rather than pair them with the wrong columns."""
+    rb = RouteBalance(RBConfig(), small_ctx["bundle"],
+                      small_ctx["tiers"])
+    rb.attach(_loaded_sim(small_ctx, seed=1))
+    reqs = _batch(small_ctx, R=4, with_budgets=False)
+    for r in reqs:
+        rb.enqueue(r, 0.0)
+    assert rb._wait_cols is reqs[0].cols
+    rb.attach(_loaded_sim(small_ctx, seed=2))  # waiting is non-empty
+    assert rb._wait_cols is False
+    instances, choice, _ = rb._decide_core(reqs)   # still decides fine
+    assert len(choice) == len(reqs)
+
+
+def test_ephemeral_columns_do_not_restamp_stream_requests(small_ctx):
+    """A mixed batch (stream + columnless requests) reaching the fused
+    fallback builds ephemeral columns WITHOUT restamping the stream
+    requests — their budget write-through target must stay the stream
+    column."""
+    stream = _batch(small_ctx, R=6, with_budgets=False)
+    scols = stream[0].cols
+    loner = _batch(small_ctx, R=1, with_budgets=False)[0]
+    loner.cols, loner.row = None, -1
+    sim = _loaded_sim(small_ctx)
+    fp = _runner(small_ctx, sim)
+    mixed = stream[:3] + [loner]
+    choice, _ = fp.decide(mixed, sim.tel)
+    assert len(choice) == 4
+    assert all(r.cols is scols and r.row == i
+               for i, r in enumerate(stream))
+    stream[1].budget = 3e-4                    # write-through intact
+    assert scols.budget[1] == 3e-4
+
+
+def test_dirty_row_tracking(small_ctx):
+    """TelemetryArrays stamps: dirty_rows(since) returns exactly the
+    rows written after `since`, and mark_all_dirty stamps everything."""
+    sim = ClusterSim(small_ctx["tiers"], small_ctx["names"], seed=0)
+    tel = sim.tel
+    v0 = tel.version
+    assert len(tel.dirty_rows(v0)) == 0
+    tel.write(5, pending=1.0, batch=1, free=1, ctx=10.0, queue=0, t=0.1)
+    tel.write(2, pending=2.0, batch=1, free=1, ctx=10.0, queue=0, t=0.2)
+    np.testing.assert_array_equal(tel.dirty_rows(v0), [2, 5])
+    v1 = tel.version
+    assert len(tel.dirty_rows(v1)) == 0
+    r0 = tel.roster_version
+    tel.kill(3)
+    assert tel.roster_version == r0 + 1
+    tel.revive(3, t=0.5)
+    assert tel.roster_version == r0 + 2
+    assert 3 in tel.dirty_rows(v1)                 # revive rewrites row 3
+    tel.mark_all_dirty()
+    assert len(tel.dirty_rows(v1)) == len(tel.alive)

@@ -7,8 +7,11 @@ the numpy reference loop, the staged jax core, and the fused
 single-dispatch program:
 
   * decision-level: exact fused == jax == numpy assignment parity on
-    randomized rosters and telemetry states (the floor that justified
-    flipping ``RBConfig.decision_backend`` to ``"fused"``);
+    randomized rosters and telemetry states, on every seed with no
+    pinned exclusions (epsilon-quantized tie-break, PR 4 — the floor
+    that justified flipping ``RBConfig.decision_backend`` to
+    ``"fused"`` and keeping it there through the zero-allocation
+    host-path rebuild);
   * serving-level: full `ClusterSim` runs land on identical
     request->instance trajectories and metrics under all three
     backends, including through failure injection;
@@ -83,16 +86,15 @@ def test_soak_decision_parity_small(seed):
 
 
 @pytest.mark.slow
-@pytest.mark.parametrize("seed", [2, 3, 5, 6, 7, 8, 9])
+@pytest.mark.parametrize("seed", list(range(10)))
 @pytest.mark.parametrize("kill_frac", [0.0, 0.25])
 def test_soak_decision_parity_full(seed, kill_frac):
     """Full soak: rosters up to 16 tiers x 128 instances, with and
-    without a quarter of the fleet dead. Exact three-way parity — the
-    seed grid pins worlds away from float32-vs-float64 argmax near-ties
-    (same-tier replica flips; the caveat documented in
-    ``repro.core.decision_jax``), which
-    ``test_soak_fused_matches_staged_jax_everywhere`` covers without
-    exclusions."""
+    without a quarter of the fleet dead. Exact three-way parity on
+    EVERY seed — the epsilon-quantized score tie-break
+    (`repro.core.scoring`) collapses float32-vs-float64 argmax
+    near-ties, so the grid no longer pins worlds away from same-tier
+    replica flips."""
     run = _run_for(seed, max_tiers=16, max_instances=128)
     _decision_parity(run, seed, R=48, kill_frac=kill_frac)
 
@@ -215,9 +217,16 @@ def test_telemetry_invariants_under_failures(seed, monkeypatch):
 
 
 def test_fused_carried_state_stays_physical(monkeypatch):
-    """The fused backend's device-resident dead-reckoned state must stay
-    physical (d >= 0, 0 <= free, b <= max_batch incl. pow2 roster pads)
-    through an entire failure-perturbed run."""
+    """The fused backend's device-resident state must stay physical
+    through an entire failure-perturbed run: the carried telemetry
+    mirror (delta-synced, never fully re-uploaded in steady state) and
+    the post-scan dead-reckoned view must respect d >= 0, free >= 0,
+    b <= max_batch incl. the pow2 roster pads. (The mirror reflects the
+    telemetry *as of the last sync* — the sim keeps writing telemetry
+    after the final batch fires, so end-of-run exact equality is not an
+    invariant; ``tests/test_hotpath.py`` asserts mirror == telemetry
+    immediately after a sync, and ``tests/test_ingest.py`` asserts the
+    delta path's assignment parity per batch.)"""
     _guard_dead_dispatch(monkeypatch)
     run = _run_for(4, max_tiers=6, max_instances=40)
     reqs = run.requests(60, seed=4)
@@ -226,16 +235,25 @@ def test_fused_carried_state_stays_physical(monkeypatch):
                       run.bundle(), run.tiers)
     run.run_cell(rb, reqs, seed=0)
     assert rb._fused is not None
-    d, b, free = (np.asarray(x, np.float64) for x in rb._fused._state)
+    # the delta path must have been the common case, not dead code
+    st = rb._fused.stats
+    assert st["delta_sync"] + st["carry"] > st["full_reseed"]
+    d, b, free, ctx = (np.asarray(x, np.float64)
+                       for x in rb._fused._state)
     maxb = np.asarray(rb._fused._maxb, np.float64)
     assert d.shape == b.shape == free.shape == maxb.shape
     assert len(d) >= run.n_instances               # pow2 roster bucket
-    assert np.all(d >= 0) and np.all(free >= 0)
-    assert np.all(b <= maxb + 1e-6)
+    I = run.n_instances
+    assert np.all(d >= 0) and np.all(free >= 0) and np.all(ctx >= 0)
+    assert np.all(b[:I] <= maxb[:I] + 1e-6)        # mirror stays physical
+    d1, b1, f1 = (np.asarray(x, np.float64)
+                  for x in rb._fused._post_state)
+    assert np.all(d1 >= 0) and np.all(f1 >= 0)
+    assert np.all(b1 <= maxb + 1e-6)
     # pad columns accumulate no load (b carries the scan's max(b,1)
     # floor, nothing more)
     pad = slice(run.n_instances, None)
-    assert np.all(d[pad] == 0) and np.all(b[pad] <= 1.0)
+    assert np.all(d1[pad] == 0) and np.all(b1[pad] <= 1.0)
 
 
 if HAVE_HYPOTHESIS:
