@@ -12,11 +12,12 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (EstimatorBundle, PRESETS, PipelineConfig,        # noqa: E402
-                        PipelineScheduler, RBConfig, RouteBalance,
-                        make_requests, run_cell)
+from repro.core import (EngineConfig, EstimatorBundle, PRESETS,          # noqa: E402
+                        RBConfig, RouteBalance, ServingEngine,
+                        make_policy, make_requests, run_cell)
 from repro.core.dispatchers import RandomDispatch, RoundRobin, \
     ShortestQueue                                                        # noqa: E402
+from repro.core.policies import RouterDispatchPolicy                    # noqa: E402
 from repro.core.routers import AvengersProRouter, BestRouteRouter, \
     PassthroughRouter                                                    # noqa: E402
 from repro.serving.tiers import paper_pool_tiers                        # noqa: E402
@@ -82,16 +83,52 @@ def fit_router(ctx, router):
 def pipeline_cell(ctx, router, dispatcher, lam, *, deployment="serial",
                   seed=0, n=None, arrival="poisson", budgets=None,
                   queue_capacity=None):
+    """A baseline cell from pre-built router/dispatcher objects, run
+    through the shared engine (the legacy pipeline path is a shim)."""
     n = n or N_REQ
     arr = make_arrivals(arrival, lam, n, seed=seed)
     reqs = make_requests(ctx["ds"], "test", arr, budgets=budgets)
-    cfg = PipelineConfig(deployment=deployment,
-                         queue_capacity=queue_capacity)
-    ps = PipelineScheduler(router, dispatcher, ctx["bundle"],
-                           ctx["tiers"], cfg)
-    m = run_cell(ps, ctx["tiers"], ctx["names"], reqs, seed=seed)
+    eng = ServingEngine(RouterDispatchPolicy(router, dispatcher),
+                        ctx["bundle"], ctx["tiers"],
+                        EngineConfig(deployment=deployment,
+                                     queue_capacity=queue_capacity))
+    m = run_cell(eng, ctx["tiers"], ctx["names"], reqs, seed=seed)
     m["lam"] = lam
     return m
+
+
+def policy_cell(ctx, policy_name, lam, *, deployment="windowed", seed=0,
+                n=None, arrival="poisson", budgets=None,
+                queue_capacity=None, serial_scoring_s=None,
+                policy_kw=None):
+    """One cell of the (policy x deployment) plane: resolve
+    `policy_name` through the POLICIES registry, fit it on the shared
+    supervision, and run it through the one `ServingEngine`."""
+    n = n or N_REQ
+    arr = make_arrivals(arrival, lam, n, seed=seed)
+    reqs = make_requests(ctx["ds"], "test", arr, budgets=budgets)
+    policy = make_policy(policy_name, **(policy_kw or {}))
+    policy.fit(ctx["train_emb"], ctx["train_Q"], ctx["train_L"],
+               ctx["prices"])
+    if serial_scoring_s is not None:    # e.g. the vLLM-SR classifier
+        policy.router.serial_scoring_s = serial_scoring_s
+    eng = ServingEngine(policy, ctx["bundle"], ctx["tiers"],
+                        EngineConfig(deployment=deployment,
+                                     queue_capacity=queue_capacity))
+    m = run_cell(eng, ctx["tiers"], ctx["names"], reqs, seed=seed)
+    m["lam"] = lam
+    return m
+
+
+def tenant_cols(m) -> str:
+    """Per-tenant p50/p99/goodput `k=v` columns for a cell row (empty
+    string when the stream carries no tenant stamps)."""
+    parts = []
+    for name, tm in sorted(m.get("tenants", {}).items()):
+        parts.append(f"t_{name}_p50={tm['p50_e2e']:.3f}")
+        parts.append(f"t_{name}_p99={tm['p99_e2e']:.3f}")
+        parts.append(f"t_{name}_goodput={tm['goodput']:.2f}")
+    return "".join(";" + p for p in parts)
 
 
 _ROWS: list = []        # rows accumulated since the last flush_json()

@@ -5,10 +5,14 @@ arm3 w_lat=0 + predictive T̂ tiebreak; arm4 full objective with a static
 per-tier prior (nominal TPOT x L̂, zero telemetry). The paper's finding:
 arm2 ~ arm3 (within-tier prediction adds nothing over reactive), arm1
 beats both via the cross-tier mix shift (72B share 14% -> 1%), and arm4
-~ arm1 (the learned predictor is not load-bearing)."""
+~ arm1 (the learned predictor is not load-bearing).
+
+The arms are `latency_mode` variants of the registry's `routebalance`
+policy, run through the shared `ServingEngine` like every other cell
+(`benchmarks.common.policy_cell`)."""
 from __future__ import annotations
 
-from .common import context, csv_row, rb_cell
+from .common import context, csv_row, policy_cell
 from repro.core import PRESETS
 
 ARMS = (("arm1_full", dict(latency_mode="full")),
@@ -22,7 +26,9 @@ def main():
     rows = []
     for lam in (12.0, 24.0, 30.0):
         for name, kw in ARMS:
-            m = rb_cell(ctx, PRESETS["uniform"], lam, cfg_kw=kw)
+            m = policy_cell(ctx, "routebalance", lam,
+                            policy_kw=dict(weights=PRESETS["uniform"],
+                                           **kw))
             share72 = sum(v for k, v in m["mix"].items() if "72b" in k)
             rows.append((name, lam, m))
             csv_row(f"isolation/{name}@{lam:.0f}",

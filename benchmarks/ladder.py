@@ -1,63 +1,81 @@
-"""Table 5 / Table 6 / Fig 2(b): the deployment ladder — serial scoring
-collapses under load; engineering-equalized (concurrent) baselines
-survive; RouteBalance's amortized batch scoring meets the requirement by
-construction. Includes the vLLM-SR-analogue bounded-queue external
-service (failures) and the quality-only argmax router motivation row."""
+"""Table 5 / Table 6 / Fig 2(b): the deployment ladder as a
+policy-orthogonal engine axis — the same `SchedulingPolicy` objects
+served under every `deployment=` arm of the one `ServingEngine`:
+
+  serial_published — one scoring call per request on one server,
+                     charged at the policy's `serial_scoring_s` (the
+                     baselines as published; collapses under load)
+  microbatch       — co-located batch collector, pads to the longest
+                     sequence (1.72 s per batch of 64), batches cannot
+                     overlap
+  concurrent       — our enhancement: scoring micro-batched off the
+                     scheduling loop on a worker pool, routing
+                     byte-identical
+  windowed         — RouteBalance's amortized batch scoring (meets the
+                     requirement by construction)
+
+Includes the vLLM-SR-analogue external classifier (bounded queue =>
+failed requests, Table 6) and the quality-only argmax router motivation
+row. Rows carry `policy=` / `deployment=` columns and land in
+``BENCH_ladder.json``; the schema test pins that the serial_published
+arms degrade under load while the concurrent-scoring variants hold.
+"""
 from __future__ import annotations
 
-from .common import context, csv_row, fit_router, pipeline_cell, rb_cell
+from .common import context, csv_row, policy_cell
 from repro.core import PRESETS
-from repro.core.dispatchers import RoundRobin, ShortestQueue
-from repro.core.routers import AvengersProRouter, BestRouteRouter
 
 LAMBDAS = (12.0, 24.0, 30.0)
+
+# cell name, registry policy, policy kwargs, deployment, extra cell kw
+CELLS = [
+    ("rb_uniform", "routebalance", dict(weights=PRESETS["uniform"]),
+     "windowed", {}),
+    # (i) serial as-published vs (ii) microbatch vs (iv) concurrent —
+    # the SAME fitted policy class, only the engine knob moves
+    ("bestroute_serial", "bestroute-rr", dict(threshold=0.5),
+     "serial_published", {}),
+    ("bestroute_microbatch", "bestroute-rr", dict(threshold=0.5),
+     "microbatch", {}),
+    ("bestroute_concurrent", "bestroute-sq", dict(threshold=0.5),
+     "concurrent", {}),
+    ("avengers_serial", "avengers-sq", dict(p_w=0.8),
+     "serial_published", {}),
+    ("avengers_concurrent", "avengers-sq", dict(p_w=0.8),
+     "concurrent", {}),
+    # (iii) vLLM-SR analogue: external classifier, bounded queue
+    ("vllm_sr", "bestroute-rr", dict(threshold=0.6), "serial_published",
+     dict(serial_scoring_s=0.120, queue_capacity=256)),
+    # motivation: quality-only argmax router (always nominally best)
+    ("argmax_quality", "bestroute-sq", dict(threshold=1.0),
+     "concurrent", {}),
+]
 
 
 def main():
     ctx = context()
     rows = []
     for lam in LAMBDAS:
-        m = rb_cell(ctx, PRESETS["uniform"], lam)
-        rows.append((f"rb_uniform@{lam:.0f}", m))
-        # (i) serial as-published
-        br = fit_router(ctx, BestRouteRouter(threshold=0.5))
-        m = pipeline_cell(ctx, br, RoundRobin(), lam, deployment="serial")
-        rows.append((f"bestroute_serial@{lam:.0f}", m))
-        # (ii) co-located microbatch
-        m = pipeline_cell(ctx, br, RoundRobin(), lam,
-                          deployment="microbatch")
-        rows.append((f"bestroute_microbatch@{lam:.0f}", m))
-        # (iv) enhanced concurrent (ours)
-        m = pipeline_cell(ctx, br, ShortestQueue(), lam,
-                          deployment="concurrent")
-        rows.append((f"bestroute_concurrent@{lam:.0f}", m))
-        # Avengers-Pro serial vs concurrent
-        ap = fit_router(ctx, AvengersProRouter(p_w=0.8))
-        m = pipeline_cell(ctx, ap, ShortestQueue(), lam,
-                          deployment="serial")
-        rows.append((f"avengers_serial@{lam:.0f}", m))
-        m = pipeline_cell(ctx, ap, ShortestQueue(), lam,
-                          deployment="concurrent")
-        rows.append((f"avengers_concurrent@{lam:.0f}", m))
-        # (iii) vLLM-SR analogue: external classifier, bounded queue
-        sr = fit_router(ctx, BestRouteRouter(threshold=0.6))
-        sr.serial_scoring_s = 0.120
-        m = pipeline_cell(ctx, sr, RoundRobin(), lam, deployment="serial",
-                          queue_capacity=256)
-        rows.append((f"vllm_sr@{lam:.0f}", m))
-        # motivation: quality-only argmax router (always nominally best)
-        qr = fit_router(ctx, BestRouteRouter(threshold=1.0))
-        m = pipeline_cell(ctx, qr, ShortestQueue(), lam,
-                          deployment="concurrent")
-        rows.append((f"argmax_quality@{lam:.0f}", m))
+        for cell_name, pname, pkw, deployment, cell_kw in CELLS:
+            m = policy_cell(ctx, pname, lam, deployment=deployment,
+                            policy_kw=pkw, **cell_kw)
+            rows.append((f"{cell_name}@{lam:.0f}", m))
     print("# ladder: name -> e2e_s, residual_s, failed")
     for name, m in rows:
         csv_row(f"ladder/{name}",
                 m.get("measured_decide_ms_per_req", 0.0) * 1e3,
-                f"e2e={m['mean_e2e']:.2f};resid={m['mean_residual']:.3f};"
-                f"fail={m['failed']};q={m['quality']:.3f}")
+                f"policy={m['policy']}"
+                f";deployment={m['deployment']}"
+                f";lam={m['lam']:.0f}"
+                f";e2e={m['mean_e2e']:.2f}"
+                f";resid={m['mean_residual']:.3f}"
+                f";fail={m['failed']}"
+                f";q={m['quality']:.3f}"
+                f";goodput={m['goodput']:.2f}")
     return rows
 
 
 if __name__ == "__main__":
+    from .common import flush_json
     main()
+    flush_json("ladder")

@@ -7,6 +7,15 @@ the committed ``BENCH_hotpath.json`` baseline:
 
   python -m benchmarks.perf_guard
 
+Since the `SchedulingPolicy` redesign the timed cells resolve through
+the policy/engine API (`RouteBalance._decide_core` ->
+`RouteBalancePolicy.assign` on the shared `ServingEngine`), so the
+committed PR-4 baselines gate the refactor itself: the API seam must
+not cost more than the tolerance. `_assert_engine_api` pins that
+wiring — a future change that detaches the bench from the production
+decision path fails the guard loudly instead of gating a dead code
+path.
+
 Only the **fused** rows gate (the production hot path this guard
 protects); staged numpy/jax rows print informationally — their Python
 loops are far noisier under co-tenant load, and a regression there
@@ -44,7 +53,21 @@ def _time_smoke_grid() -> dict:
     return {r["name"]: r["us_per_call"] for r in rows}
 
 
+def _assert_engine_api():
+    """The timed grid must exercise the policy/engine path the
+    production scheduler serves through."""
+    from benchmarks import common  # noqa: F401  (puts src on sys.path)
+    from repro.core import (POLICIES, RouteBalance, RouteBalancePolicy,
+                            ServingEngine, make_policy)
+    assert issubclass(RouteBalance, ServingEngine), \
+        "RouteBalance detached from ServingEngine — guard would gate a " \
+        "dead path"
+    assert "routebalance" in POLICIES
+    assert isinstance(make_policy("routebalance"), RouteBalancePolicy)
+
+
 def main() -> int:
+    _assert_engine_api()
     os.environ["REPRO_HOTPATH_SMOKE"] = "1"
     baseline_doc = json.loads((REPO / "BENCH_hotpath.json").read_text())
     from benchmarks import common

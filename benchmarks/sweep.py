@@ -27,7 +27,7 @@ import os
 
 import numpy as np
 
-from .common import N_REQ, csv_row
+from .common import N_REQ, csv_row, tenant_cols
 from repro.core import PRESETS, RBConfig, RouteBalance
 from repro.serving.cluster import ClusterSim
 from repro.serving.scenarios import get_scenario, randomize_telemetry
@@ -122,7 +122,8 @@ def main():
                     f";delta_syncs={st.get('delta_sync', 0)}"
                     f";carries={st.get('carry', 0)}"
                     f";parity={parity:.3f}"
-                    f";parity_np={parity_np:.3f}")
+                    f";parity_np={parity_np:.3f}"
+                    + tenant_cols(m))
 
 
 if __name__ == "__main__":

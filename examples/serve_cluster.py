@@ -1,16 +1,16 @@
-"""End-to-end serving driver: one deployed RouteBalance stack sweeping
-its weight vector across the frontier, vs an engineering-equalized
-BEST-Route baseline — the paper's headline experiment in miniature.
+"""End-to-end serving driver: policies on one engine — a deployed
+RouteBalance stack sweeping its weight vector across the frontier, vs
+an engineering-equalized BEST-Route baseline, all through the SAME
+`ServingEngine` (only the `SchedulingPolicy` and the `deployment=` knob
+differ) — the paper's headline experiment in miniature.
 
     PYTHONPATH=src python examples/serve_cluster.py [--lam 12] [--n 600]
 """
 import argparse
 
-from repro.core import (EstimatorBundle, PRESETS, PipelineConfig,
-                        PipelineScheduler, RBConfig, RouteBalance,
-                        make_requests, run_cell)
-from repro.core.dispatchers import ShortestQueue
-from repro.core.routers import BestRouteRouter
+from repro.core import (EngineConfig, EstimatorBundle, PRESETS,
+                        ServingEngine, fit_policy, make_requests,
+                        run_cell)
 from repro.serving.tiers import paper_pool_tiers
 from repro.serving.workload import poisson_arrivals
 from repro.serving.world import build_dataset, paper_world
@@ -27,35 +27,36 @@ def main():
     tiers = paper_pool_tiers()
     bundle = EstimatorBundle.train(ds, tiers, names)
 
-    def cell(sched):
+    def cell(policy_name, deployment, **policy_kw):
+        policy = fit_policy(policy_name, bundle, tiers, names, ds,
+                            **policy_kw)
+        eng = ServingEngine(policy, bundle, tiers,
+                            EngineConfig(deployment=deployment))
         reqs = make_requests(ds, "test",
                              poisson_arrivals(args.lam, args.n, seed=1))
-        return run_cell(sched, tiers, names, reqs)
+        return run_cell(eng, tiers, names, reqs)
 
-    print(f"{'cell':26s} {'quality':>8s} {'E2E s':>7s} {'p99 s':>7s} "
+    print(f"{'cell':32s} {'quality':>8s} {'E2E s':>7s} {'p99 s':>7s} "
           f"{'cost $':>9s} {'tput':>6s}")
-    for name, w in (("rb/cost", PRESETS["cost"]),
-                    ("rb/uniform", PRESETS["uniform"]),
-                    ("rb/quality", PRESETS["quality"])):
-        m = cell(RouteBalance(RBConfig(weights=w), bundle, tiers))
-        print(f"{name:26s} {m['quality']:8.3f} {m['mean_e2e']:7.2f} "
+
+    def show(name, m):
+        print(f"{name:32s} {m['quality']:8.3f} {m['mean_e2e']:7.2f} "
               f"{m['p99_e2e']:7.1f} {m['cost_per_req']:9.2e} "
               f"{m['throughput']:6.1f}")
+
+    # one policy family, three weight vectors, windowed deployment
+    for wname, w in (("cost", PRESETS["cost"]),
+                     ("uniform", PRESETS["uniform"]),
+                     ("quality", PRESETS["quality"])):
+        m = cell("routebalance", "windowed", weights=w)
+        show(f"routebalance/{wname} (windowed)", m)
+    # the equalized baseline on the SAME engine: concurrent scoring
     for t in (0.5, 0.7):
-        r = BestRouteRouter(threshold=t)
-        r.fit_from = None
-        prompts, Q, L = ds.split("train")
-        import numpy as np
-        from benchmarks.common import _embed_all
-        emb = _embed_all(bundle, prompts)
-        prices = np.array([tt.price_out for m_ in names
-                           for tt in tiers if tt.model == m_])
-        r.fit(emb, Q, L, prices)
-        m = cell(PipelineScheduler(r, ShortestQueue(), bundle, tiers,
-                                   PipelineConfig(deployment="concurrent")))
-        print(f"{'bestroute/t%.1f' % t:26s} {m['quality']:8.3f} "
-              f"{m['mean_e2e']:7.2f} {m['p99_e2e']:7.1f} "
-              f"{m['cost_per_req']:9.2e} {m['throughput']:6.1f}")
+        m = cell("bestroute-sq", "concurrent", threshold=t)
+        show(f"bestroute-sq/t{t} (concurrent)", m)
+    # the as-published deployment, one knob away: serial scoring
+    m = cell("bestroute-sq", "serial_published", threshold=0.5)
+    show("bestroute-sq/t0.5 (serial)", m)
 
 
 if __name__ == "__main__":

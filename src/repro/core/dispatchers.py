@@ -1,16 +1,25 @@
-"""Replica dispatchers for pipeline mode: round-robin, shortest-queue,
-random (§5)."""
+"""Replica dispatchers for the decoupled baseline policies:
+round-robin, shortest-queue, random (§5).
+
+`pick_slots(slots, tel)` is the dispatch interface: `slots` is the
+candidate set as roster-slot indices (ascending — the router's
+candidate filter over the alive mask), `tel` the scheduler-side
+columnar `TelemetryArrays` view. State-dependent dispatchers read
+telemetry as vectorized column gathers — the legacy per-request
+`telemetry.get(inst.iid, ...)` dict scan is gone (it marshaled one
+dict per instance per request, the baselines' host-path hot spot)."""
 from __future__ import annotations
 
-from typing import Dict, List, Sequence
-
 import numpy as np
+
+from repro.serving.cluster import TelemetryArrays
 
 
 class Dispatcher:
     name = "dispatcher"
 
-    def pick(self, candidates: Sequence, telemetry: Dict[str, Dict]) -> int:
+    def pick_slots(self, slots: np.ndarray, tel: TelemetryArrays) -> int:
+        """Index into `slots` of the chosen replica."""
         raise NotImplementedError
 
 
@@ -20,8 +29,8 @@ class RoundRobin(Dispatcher):
     def __init__(self):
         self._n = 0
 
-    def pick(self, candidates, telemetry):
-        i = self._n % len(candidates)
+    def pick_slots(self, slots, tel):
+        i = self._n % len(slots)
         self._n += 1
         return i
 
@@ -29,12 +38,11 @@ class RoundRobin(Dispatcher):
 class ShortestQueue(Dispatcher):
     name = "sq"
 
-    def pick(self, candidates, telemetry):
-        loads = []
-        for inst in candidates:
-            s = telemetry.get(inst.iid, inst.telemetry())
-            loads.append(s["queue_depth"] * 1000 + s["pending_decode"])
-        return int(np.argmin(loads))
+    def pick_slots(self, slots, tel):
+        # queue depth dominates, pending decode tokens break ties —
+        # one vectorized argmin over the telemetry columns
+        return int(np.argmin(tel.queue[slots] * 1000.0
+                             + tel.pending[slots]))
 
 
 class RandomDispatch(Dispatcher):
@@ -43,8 +51,8 @@ class RandomDispatch(Dispatcher):
     def __init__(self, seed: int = 0):
         self.rng = np.random.default_rng(seed)
 
-    def pick(self, candidates, telemetry):
-        return int(self.rng.integers(0, len(candidates)))
+    def pick_slots(self, slots, tel):
+        return int(self.rng.integers(0, len(slots)))
 
 
 DISPATCHERS = {"rr": RoundRobin, "sq": ShortestQueue,

@@ -74,6 +74,15 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
     wall = (max((r.finish_time or r.arrival) for r in requests)
             - min(r.arrival for r in requests))
     out = aggregate(requests, list(tiers), model_names, wall)
+    # engine-backed schedulers self-identify: the policy/deployment
+    # axes land in every cell row so BENCH artifacts stay comparable
+    # across the registry sweep
+    policy = getattr(scheduler, "policy", None)
+    if policy is not None:
+        out["policy"] = getattr(policy, "name", type(policy).__name__)
+        ecfg = getattr(scheduler, "ecfg", None)
+        if ecfg is not None:
+            out["deployment"] = ecfg.deployment
     if hasattr(scheduler, "compute_log") and scheduler.compute_log:
         sizes = np.array([s for s, _ in scheduler.compute_log])
         times = np.array([dt for _, dt in scheduler.compute_log])

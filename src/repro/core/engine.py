@@ -1,0 +1,413 @@
+"""One engine, many policies: the policy-agnostic serving engine.
+
+The paper's headline claims are *comparative* — RouteBalance is judged
+against routers that are re-run as schedulers over the SAME serving
+substrate once "router engineering is equalized" (§5–§6.3). This module
+is that substrate, factored out of the RouteBalance scheduler so every
+policy — RouteBalance's fused objective, the decoupled
+router→dispatcher baselines, the paper's enhanced concurrent-scoring
+variants — runs through one zero-allocation engine:
+
+  * **batch formation** — the adaptive window loop (`deployment=
+    "windowed"`, RouteBalance's amortized batch scoring) or the
+    scoring-station models of the §6.3 deployment ladder
+    (`"serial_published"`: one scoring call per request on one server,
+    as the baselines shipped; `"microbatch"`: a co-located batch
+    collector that pads to the longest sequence and cannot overlap
+    batches; `"concurrent"`: scoring micro-batched off the scheduling
+    loop on a worker pool — our engineering-equalized enhancement);
+  * **SoA ingest** — the waiting queue keeps a row-index ring parallel
+    to the request stream's `RequestColumns`, so a fired batch reaches
+    the policy as a vectorized column slice with memoized embeddings
+    (baselines inherit the zero-allocation host path for free);
+  * **dispatch + residual accounting** — budget clamping, instance
+    submission, and the paper's off-instance residual decomposition
+    (compute / batch wait / stats fetch for windowed deployments,
+    router queue wait for the station deployments) are charged here,
+    identically for every policy;
+  * **decision-time measurement** — per-batch wall time feeds the
+    `charge_compute` model and `compute_log`, so
+    `measured_decide_ms_per_req` is comparable across policies.
+
+A policy implements the `SchedulingPolicy` protocol: `prepare(bundle,
+tiers)` once per engine, `on_attach(sim)` per roster, and a batched
+`assign(batch_view, cluster_view) -> AssignmentResult` per fired batch.
+The engine never looks inside the decision; the policy never touches
+the event loop, the queue, telemetry freshness, or dispatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.cluster import ClusterSim, Instance
+from repro.serving.request import Request
+from repro.serving.tiers import Tier
+
+from .budget import max_tokens_clamp
+
+DEPLOYMENTS = ("windowed", "concurrent", "serial_published", "microbatch")
+# legacy PipelineConfig spelling, accepted as an alias
+_DEPLOYMENT_ALIASES = {"serial": "serial_published"}
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Policy-agnostic engine knobs. `deployment` is the §6.3 ladder
+    axis, orthogonal to the policy: the same `SchedulingPolicy` can be
+    served windowed (amortized batch scoring), concurrent (equalized
+    worker-pool scoring), or serial_published (one call per request,
+    charged at the policy's `serial_scoring_s` — the as-published
+    deployments that collapse under load)."""
+    deployment: str = "windowed"
+    # windowed-deployment knobs (RouteBalance's batch formation)
+    base_window: float = 0.10
+    adaptive: bool = True
+    fixed_batch: Optional[int] = None
+    charge_compute: bool = True
+    # scoring-station knobs (§6.3 ladder deployments)
+    n_workers: int = 32            # concurrent scoring workers
+    microbatch_size: int = 64
+    microbatch_time: float = 1.72  # padded batch service time (§6.3)
+    queue_capacity: Optional[int] = None   # bounded => drops (vLLM-SR)
+
+
+class BatchView:
+    """One fired decision batch as the policy sees it: the request
+    objects plus (when the batch is a slice of one ingest stream) the
+    shared `RequestColumns` and row indices, so policies stage with
+    vectorized gathers instead of per-request Python."""
+
+    __slots__ = ("reqs", "cols", "rows", "t")
+
+    def __init__(self, reqs: Sequence[Request], cols=None,
+                 rows: Optional[np.ndarray] = None, t: float = 0.0):
+        self.reqs = reqs
+        self.cols = cols
+        self.rows = rows
+        self.t = t
+
+    def __len__(self) -> int:
+        return len(self.reqs)
+
+    def columns(self, encoder):
+        """(cols, rows) with embeddings guaranteed — resolving the
+        batch's shared stream columns, or building ephemeral
+        non-stamping columns for direct/legacy callers."""
+        if self.cols is None:
+            from repro.serving.request import RequestColumns
+            self.cols, self.rows = RequestColumns.for_batch(
+                self.reqs, encoder)
+        else:
+            self.cols.ensure_embeddings(encoder)
+        return self.cols, self.rows
+
+
+class Ready:
+    """Already-materialized decision payload: the eager twin of
+    `repro.core.hotpath.LazyDecision`, so `AssignmentResult.fetch`
+    goes through one interface regardless of backend."""
+
+    __slots__ = ("_out",)
+
+    def __init__(self, choice: np.ndarray, l_chosen: np.ndarray):
+        self._out = (choice, l_chosen)
+
+    def fetch(self):
+        return self._out
+
+
+class AssignmentResult:
+    """A policy's answer for one batch: the candidate roster plus a
+    possibly-deferred (choice, l_chosen) pair. `choice[r]` indexes
+    `instances`; `l_chosen[r]` is the predicted output length at the
+    chosen instance. The payload exposes `fetch()` — the fused
+    backend hands a `LazyDecision` (device arrays, transfer deferred
+    to the dispatch point), everything else a `Ready`."""
+
+    __slots__ = ("instances", "_res")
+
+    def __init__(self, instances: Sequence[Instance], res):
+        self.instances = instances
+        self._res = res
+
+    def fetch(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self._res.fetch()
+
+
+class SchedulingPolicy:
+    """The pluggable decision layer. Subclasses override `assign`;
+    `prepare`/`on_attach`/`fit` are optional hooks.
+
+    Class attributes consumed by the engine:
+
+      * `serial_scoring_s` — per-request scoring service time charged
+        by the `serial_published` deployment (the as-published serial
+        station of §6.3). Policies that batch by construction keep the
+        default; decoupled baselines surface their router's measured
+        serial forward.
+      * `budget_clamp` — whether dispatch applies the runtime
+        max-tokens budget clamp (Eq. 2's execution-side half).
+
+    `engine_overrides()` lets a policy pin `EngineConfig` fields its
+    own config owns (RouteBalance's batch-formation knobs live in
+    `RBConfig`): the engine applies them over whatever config it was
+    constructed with, so a policy built with e.g. `fixed_batch=8`
+    behaves the same whether it reaches the engine through the
+    `RouteBalance` convenience class, the `POLICIES` registry, or a
+    hand-built `ServingEngine`.
+    """
+
+    name = "policy"
+    serial_scoring_s = 0.0
+    budget_clamp = True
+
+    def engine_overrides(self) -> dict:
+        """EngineConfig fields this policy's own config dictates."""
+        return {}
+
+    def prepare(self, bundle, tiers: Sequence[Tier]):
+        """Bind the estimator stack once per engine. Policies that
+        keep a reference may rebind a private copy (e.g. a different
+        KNN backend) and expose it as `self.bundle` — the engine picks
+        the rebound copy up."""
+        self.bundle = bundle
+
+    def fit(self, emb: np.ndarray, quality: np.ndarray,
+            lengths: np.ndarray, prices: np.ndarray):
+        """Train policy-owned predictors on the shared supervision
+        (the paper's fairness control: identical labels, identical
+        train split as RouteBalance's KNN estimator)."""
+        return self
+
+    def on_attach(self, sim: ClusterSim):
+        """New roster: drop per-roster compiled/cached state."""
+
+    def assign(self, batch: BatchView, cluster: ClusterSim
+               ) -> AssignmentResult:
+        raise NotImplementedError
+
+
+class ServingEngine:
+    """Event-driven scheduler over a ClusterSim, generic in the policy.
+
+    Windowed deployment is the zero-allocation fused serving path of
+    PR 4: SoA ingest ring, adaptive batch window, async dispatch with
+    residual accounting. The station deployments reproduce the legacy
+    `core/pipeline.py` event dynamics exactly (differential-parity
+    tested in ``tests/test_engine_parity.py``), so the §6.3 ladder is
+    now an engine knob rather than a separate scheduler."""
+
+    def __init__(self, policy: SchedulingPolicy, bundle,
+                 tiers: Sequence[Tier],
+                 cfg: Optional[EngineConfig] = None):
+        cfg = cfg if cfg is not None else EngineConfig()
+        overrides = policy.engine_overrides()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        dep = _DEPLOYMENT_ALIASES.get(cfg.deployment, cfg.deployment)
+        if dep != cfg.deployment:
+            cfg = dataclasses.replace(cfg, deployment=dep)
+        assert cfg.deployment in DEPLOYMENTS, cfg.deployment
+        self.policy = policy
+        self.ecfg = cfg
+        self.tiers = list(tiers)
+        policy.prepare(bundle, self.tiers)
+        # a policy may rebind a private bundle copy (knn_backend): the
+        # engine must stage/ingest through the same stack it decides on
+        self.bundle = getattr(policy, "bundle", None) or bundle
+        self.sim: Optional[ClusterSim] = None
+        self._measured_compute = 0.004  # warm estimate, updated online
+        self.decisions = 0
+        self.batches = 0
+        self.expected: Optional[int] = None   # stop firing once all served
+        self.compute_log: List[Tuple[int, float]] = []
+        # windowed deployment: the waiting queue's SoA twin — a
+        # row-index buffer parallel to `self.waiting`, so a decision
+        # batch is an index slice into the stream's RequestColumns with
+        # no per-request work at fire time. _wait_cols: the stream's
+        # columns | None (queue empty) | False (mixed/columnless
+        # stream -> legacy AoS marshaling)
+        self.waiting: List[Request] = []
+        self._wait_rows = np.empty(256, np.int64)
+        self._wait_start = 0
+        self._wait_n = 0
+        self._wait_cols = None
+        # station deployments: scoring queue + worker occupancy
+        self.queue: List[Request] = []
+        self.busy_servers = 0
+        self.n_servers = (cfg.n_workers if cfg.deployment == "concurrent"
+                          else 1)
+
+    # -- wiring ---------------------------------------------------------------
+    def attach(self, sim: ClusterSim):
+        self.sim = sim
+        self.policy.on_attach(sim)            # new sim -> new roster
+        if self.ecfg.deployment != "windowed":
+            return                            # station mode drains on arrival
+        self._wait_start = self._wait_n = 0
+        # requests queued from before a re-attach have no rows in the
+        # (just-cleared) ring, so the ring is no longer parallel to
+        # `waiting` — marshal AoS until the queue drains (`_fire`'s
+        # drain reset re-enables the SoA path)
+        self._wait_cols = False if self.waiting else None
+        sim.push(self.ecfg.base_window, self._fire)
+
+    def enqueue(self, req: Request, t: float):
+        if self.ecfg.deployment != "windowed":
+            self._enqueue_station(req, t)
+            return
+        self.waiting.append(req)
+        cols = req.cols
+        if cols is None or req.row < 0 or (
+                self._wait_cols is not None
+                and self._wait_cols is not cols):
+            self._wait_cols = False           # fall back to AoS marshaling
+            return
+        if self._wait_cols is None:
+            # first sight of the stream: fill the embedding column now
+            # (ingest time, off the measured decision path; a no-op when
+            # the workload generator pre-embedded)
+            cols.ensure_embeddings(self.bundle.encoder)
+            self._wait_cols = cols
+        end = self._wait_start + self._wait_n
+        if end >= len(self._wait_rows):
+            if self._wait_start:              # compact, then maybe grow
+                self._wait_rows[:self._wait_n] = \
+                    self._wait_rows[self._wait_start:end].copy()
+                self._wait_start = 0
+                end = self._wait_n
+            if end >= len(self._wait_rows):
+                self._wait_rows = np.concatenate(
+                    [self._wait_rows, np.empty_like(self._wait_rows)])
+        self._wait_rows[end] = req.row
+        self._wait_n += 1
+
+    # -- windowed deployment --------------------------------------------------
+    def _window(self) -> float:
+        if not self.ecfg.adaptive:
+            return self.ecfg.base_window
+        tel = self.sim.tel
+        alive = tel.alive
+        busy = float(np.mean(np.minimum(
+            tel.batch[alive] / np.maximum(tel.max_batch[alive], 1.0),
+            1.0))) if alive.any() else 0.0
+        return float(np.clip(self.ecfg.base_window * (0.4 + 1.8 * busy),
+                             0.04, 0.30))
+
+    def _fire(self, t: float):
+        batch = self.waiting
+        if self.ecfg.fixed_batch:
+            batch = batch[:self.ecfg.fixed_batch]
+        self.waiting = self.waiting[len(batch):]
+        k = len(batch)
+        cols = rows = None
+        if self._wait_cols not in (None, False):
+            cols = self._wait_cols
+            rows = self._wait_rows[self._wait_start:self._wait_start + k]
+            self._wait_start += k
+            self._wait_n -= k
+        if not self.waiting:                  # drained: accept a new
+            self._wait_start = self._wait_n = 0   # stream (or recover
+            self._wait_cols = None                # from a mixed one)
+        if batch:
+            t0 = time.perf_counter()
+            self._decide(batch, t, cols, rows)
+            dt_meas = time.perf_counter() - t0
+            self._measured_compute = (0.8 * self._measured_compute
+                                      + 0.2 * dt_meas)
+            self.compute_log.append((len(batch), dt_meas))
+        if (self.expected is not None and not self.waiting
+                and self.decisions >= self.expected):
+            return                          # all requests dispatched
+        self.sim.push(t + self._window(), self._fire)
+
+    def _decide(self, batch: List[Request], t: float, cols=None,
+                rows: Optional[np.ndarray] = None):
+        res = self.policy.assign(BatchView(batch, cols, rows, t),
+                                 self.sim)
+        R = len(batch)
+        I = int(self.sim.tel.alive.sum())
+
+        # dispatch + residual accounting. The bookkeeping between the
+        # dispatch above and res.fetch() below runs while an async
+        # policy's device program executes; eager policies fetch here
+        # for free (already numpy).
+        compute = (self._measured_compute if self.ecfg.charge_compute
+                   else 0.0)
+        stats = 0.0005 * I / 13                       # non-blocking fetch
+        per_req_compute = compute / max(R, 1) + compute * 0.2
+        now = t + compute + stats
+        choice, l_chosen = res.fetch()
+        instances = res.instances
+        clamp = self.policy.budget_clamp
+        for r_idx, req in enumerate(batch):
+            inst = instances[int(choice[r_idx])]
+            req.sched_compute = per_req_compute
+            req.sched_stats_fetch = stats
+            req.sched_batch_wait = max(t - req.arrival, 0.0)
+            mt = (max_tokens_clamp(req.budget, req.prompt.len_in,
+                                   inst.tier.price_in,
+                                   inst.tier.price_out)
+                  if clamp else None)
+            inst.submit(req, now, float(l_chosen[r_idx]), mt)
+            self.decisions += 1
+        self.batches += 1
+
+    # -- station deployments (§6.3 ladder) ------------------------------------
+    def _enqueue_station(self, req: Request, t: float):
+        cap = self.ecfg.queue_capacity
+        if cap is not None and len(self.queue) >= cap:
+            req.failed = True
+            self.sim.completed.append(req)
+            return
+        self.queue.append(req)
+        self._drain(t)
+
+    def _service_time(self, n: int) -> float:
+        if self.ecfg.deployment == "microbatch":
+            return self.ecfg.microbatch_time
+        return self.policy.serial_scoring_s
+
+    def _drain(self, t: float):
+        while self.queue and self.busy_servers < self.n_servers:
+            dep = self.ecfg.deployment
+            if dep == "microbatch":
+                n = min(len(self.queue), self.ecfg.microbatch_size)
+            elif dep == "concurrent":
+                # micro-batched off the scheduling loop: each worker
+                # takes a small group; scoring latency ~ serial per
+                # forward but workers overlap
+                n = min(len(self.queue),
+                        max(1, len(self.queue) // self.n_servers))
+                n = min(n, 8)
+            else:
+                n = 1
+            group = self.queue[:n]
+            self.queue = self.queue[n:]
+            self.busy_servers += 1
+            dt = self._service_time(n)
+            self.sim.push(t + dt, lambda tt, g=group: self._scored(g, tt))
+
+    def _scored(self, group: List[Request], t: float):
+        self.busy_servers -= 1
+        t0 = time.perf_counter()
+        res = self.policy.assign(BatchView(group, t=t), self.sim)
+        choice, l_chosen = res.fetch()
+        instances = res.instances
+        clamp = self.policy.budget_clamp
+        for j, req in enumerate(group):
+            req.router_queue_wait = t - req.arrival
+            inst = instances[int(choice[j])]
+            mt = (max_tokens_clamp(req.budget, req.prompt.len_in,
+                                   inst.tier.price_in,
+                                   inst.tier.price_out)
+                  if clamp else None)
+            inst.submit(req, t, float(l_chosen[j]), mt)
+            self.decisions += 1
+        self.batches += 1
+        self.compute_log.append((len(group), time.perf_counter() - t0))
+        self._drain(t)

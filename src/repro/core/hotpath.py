@@ -79,7 +79,9 @@ class LazyDecision:
     deferred until the caller actually needs the values (the dispatch
     point). `fetch()` blocks on the device program, slices off the
     shape-padding rows and returns numpy — idempotently, so diagnostics
-    may re-fetch."""
+    may re-fetch. This is the fused policy's `AssignmentResult` payload
+    (`repro.core.engine`): the engine's windowed dispatch overlaps its
+    host bookkeeping with the device program and fetches last."""
 
     __slots__ = ("_choice", "_l", "_R", "_stats", "_out")
 

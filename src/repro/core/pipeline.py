@@ -1,33 +1,34 @@
-"""Pipeline mode: decoupled router -> dispatcher baselines inside the
-SAME batching/telemetry/dispatch path as RouteBalance (§5), plus the
-deployment-model ladder of §6.3:
+"""DEPRECATED shim: pipeline mode is now the `ServingEngine` with a
+`RouterDispatchPolicy` and a `deployment=` knob.
 
-  serial      — one scoring call per request, one server (as published)
-  microbatch  — co-located batch collector, pads to the longest sequence
-                (1.72 s per batch of 64), batches cannot overlap
-  concurrent  — our enhancement: scoring micro-batched off the scheduling
-                loop on a thread-pool (32 workers), routing byte-identical
+The decoupled router -> dispatcher baselines and the §6.3 deployment
+ladder (serial-as-published / microbatch / concurrent, plus the
+vLLM-SR bounded-queue variant via `queue_capacity`) live on the shared
+engine (`repro.core.engine`), selected through the `POLICIES` registry
+(`repro.core.policies`):
 
-vLLM-SR runs as a separate-process classifier service with a BOUNDED
-queue — overflow = failed requests (Table 6).
+    from repro.core import EngineConfig, ServingEngine, make_policy
+    policy = make_policy("bestroute-sq", threshold=0.5)
+    policy.fit(emb, Q, L, prices)
+    eng = ServingEngine(policy, bundle, tiers,
+                        EngineConfig(deployment="serial_published"))
+
+`PipelineScheduler(...)` keeps constructing exactly that engine (the
+differential parity suite in ``tests/test_engine_parity.py`` pins the
+trajectories against the frozen legacy implementation), but warns —
+new code should build the engine directly.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import warnings
+from typing import Optional, Sequence
 
-import numpy as np
-
-from repro.serving.cluster import ClusterSim
-from repro.serving.request import Request
 from repro.serving.tiers import Tier
 
-from .budget import max_tokens_clamp
 from .dispatchers import Dispatcher
+from .engine import EngineConfig, ServingEngine
 from .routers import Router
-from repro.estimators.embedding import pad_tokens
-
-from .scheduler import EstimatorBundle
 
 
 @dataclasses.dataclass
@@ -40,85 +41,22 @@ class PipelineConfig:
     budget_clamp: bool = True
 
 
-class PipelineScheduler:
-    """Router station -> dispatcher -> instance, event-driven."""
-
-    def __init__(self, router: Router, dispatcher: Dispatcher,
-                 bundle: EstimatorBundle, tiers: Sequence[Tier],
-                 cfg: PipelineConfig = PipelineConfig()):
-        self.router = router
-        self.dispatcher = dispatcher
-        self.bundle = bundle
-        self.tiers = list(tiers)
-        self.cfg = cfg
-        self.sim: Optional[ClusterSim] = None
-        self.queue: List[Request] = []
-        self.busy_servers = 0
-        self.n_servers = (1 if cfg.deployment in ("serial", "microbatch")
-                          else cfg.n_workers)
-
-    def attach(self, sim: ClusterSim):
-        self.sim = sim
-
-    # -- arrival ------------------------------------------------------------
-    def enqueue(self, req: Request, t: float):
-        cap = self.cfg.queue_capacity
-        if cap is not None and len(self.queue) >= cap:
-            req.failed = True
-            self.sim.completed.append(req)
-            return
-        self.queue.append(req)
-        self._drain(t)
-
-    # -- scoring station -----------------------------------------------------
-    def _service_time(self, n: int) -> float:
-        if self.cfg.deployment == "microbatch":
-            return self.cfg.microbatch_time
-        return self.router.serial_scoring_s
-
-    def _drain(self, t: float):
-        while self.queue and self.busy_servers < self.n_servers:
-            if self.cfg.deployment == "microbatch":
-                n = min(len(self.queue), self.cfg.microbatch_size)
-            elif self.cfg.deployment == "concurrent":
-                # micro-batched off the scheduling loop: each worker takes
-                # a small group; scoring latency ~ serial per forward but
-                # workers overlap
-                n = min(len(self.queue),
-                        max(1, len(self.queue) // self.n_servers))
-                n = min(n, 8)
-            else:
-                n = 1
-            group = self.queue[:n]
-            self.queue = self.queue[n:]
-            self.busy_servers += 1
-            dt = self._service_time(n)
-            self.sim.push(t + dt, lambda tt, g=group: self._scored(g, tt))
-
-    def _scored(self, group: List[Request], t: float):
-        self.busy_servers -= 1
-        toks = pad_tokens([r.prompt.tokens for r in group],
-                          self.bundle.encoder.max_len)
-        lens = np.array([min(len(r.prompt.tokens),
-                             self.bundle.encoder.max_len) for r in group])
-        emb = self.bundle.encoder.encode(toks, lens)
-        models = self.router.route(emb)
-        _, L = self.bundle.knn.query(emb)
-        tel = self.sim.telemetry()
-        for j, req in enumerate(group):
-            req.router_queue_wait = t - req.arrival
-            m = int(models[j])
-            cands = [i for i in self.sim.alive_instances()
-                     if m < 0 or i.model_idx == m]
-            if not cands:
-                cands = self.sim.alive_instances()
-            pick = self.dispatcher.pick(cands, tel)
-            inst = cands[pick]
-            pred = float(L[j, inst.model_idx])
-            mt = None
-            if self.cfg.budget_clamp:
-                mt = max_tokens_clamp(req.budget, req.prompt.len_in,
-                                      inst.tier.price_in,
-                                      inst.tier.price_out)
-            inst.submit(req, t, pred, mt)
-        self._drain(t)
+def PipelineScheduler(router: Router, dispatcher: Dispatcher,
+                      bundle, tiers: Sequence[Tier],
+                      cfg: PipelineConfig = PipelineConfig()
+                      ) -> ServingEngine:
+    """Deprecated constructor for the legacy pipeline-mode scheduler;
+    returns the equivalent `ServingEngine`."""
+    warnings.warn(
+        "PipelineScheduler is deprecated: build a ServingEngine with a "
+        "RouterDispatchPolicy (repro.core.policies) and an EngineConfig "
+        "deployment instead", DeprecationWarning, stacklevel=2)
+    from .policies import RouterDispatchPolicy
+    policy = RouterDispatchPolicy(router, dispatcher,
+                                  budget_clamp=cfg.budget_clamp)
+    return ServingEngine(policy, bundle, tiers, EngineConfig(
+        deployment=cfg.deployment,          # "serial" alias accepted
+        n_workers=cfg.n_workers,
+        microbatch_size=cfg.microbatch_size,
+        microbatch_time=cfg.microbatch_time,
+        queue_capacity=cfg.queue_capacity))

@@ -1,4 +1,6 @@
-"""Decoupled model routers (pipeline-mode baselines, §5-§6).
+"""Decoupled model routers (baseline policies, §5-§6) — composed with
+a dispatcher into a `RouterDispatchPolicy` (`repro.core.policies`) and
+served through the shared `ServingEngine`.
 
 All consume the SAME supervision as RouteBalance's KNN estimator (the
 paper's fairness control: identical DeepEval labels, identical train
@@ -13,7 +15,8 @@ picks a replica.
     pool).
 
 Each returns a model index per request plus its serial per-request
-scoring time (used by the deployment ladder of §6.3).
+scoring time (`serial_scoring_s` — what the engine's
+``deployment="serial_published"`` arm charges per request, §6.3).
 """
 from __future__ import annotations
 

@@ -4,10 +4,19 @@
     PYTHONPATH=src python -m repro.launch.serve --pool zoo --preset quality
     PYTHONPATH=src python -m repro.launch.serve --scenario multitenant \
         --preset cost --lam-scale 2.0
+    PYTHONPATH=src python -m repro.launch.serve --policy bestroute-sq \
+        --deployment serial_published --lam 24
 
 --scenario selects a named world from `repro.serving.scenarios`
 (roster + composite multi-tenant workload + failure/recovery schedule);
 it overrides --pool/--arrivals/--lam.
+
+--policy selects any scheduler from the `repro.core.policies.POLICIES`
+registry (RouteBalance plus the router x dispatcher baseline grid);
+--deployment picks the engine's serving arm (windowed amortized batch
+scoring, concurrent equalized worker-pool scoring, serial_published
+one-call-per-request as-published, microbatch collector) — every
+combination runs through the one `ServingEngine`.
 """
 from __future__ import annotations
 
@@ -16,12 +25,22 @@ import json
 
 
 def main():
+    from repro.core.engine import DEPLOYMENTS
+    from repro.core.policies import POLICIES
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--pool", choices=("paper", "zoo"), default="paper")
     ap.add_argument("--scenario", default="",
                     help="named scenario from repro.serving.scenarios "
                          "(overrides --pool/--arrivals/--lam)")
-    ap.add_argument("--preset", default="uniform")
+    ap.add_argument("--policy", default="routebalance",
+                    choices=sorted(POLICIES),
+                    help="scheduling policy from the POLICIES registry")
+    ap.add_argument("--deployment", default="windowed",
+                    choices=DEPLOYMENTS,
+                    help="engine serving arm (§6.3 ladder axis)")
+    ap.add_argument("--preset", default="uniform",
+                    help="weight preset (routebalance policy only)")
     ap.add_argument("--weights", default="",
                     help="wq,wl,wc overriding --preset")
     ap.add_argument("--lam", type=float, default=12.0)
@@ -33,8 +52,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.core import (EstimatorBundle, PRESETS, RBConfig,
-                            RouteBalance, make_requests, run_cell)
+    from repro.core import (EngineConfig, EstimatorBundle, PRESETS,
+                            ServingEngine, fit_policy, make_requests,
+                            run_cell)
     from repro.serving.tiers import assigned_pool_tiers, paper_pool_tiers
     from repro.serving.workload import make_arrivals
     from repro.serving.world import World, build_dataset, paper_world
@@ -42,14 +62,16 @@ def main():
     w = PRESETS[args.preset]
     if args.weights:
         w = tuple(float(x) for x in args.weights.split(","))
+    policy_kw = dict(weights=w) if args.policy == "routebalance" else {}
 
     if args.scenario:
         from repro.serving.scenarios import get_scenario
         run = get_scenario(args.scenario).build(dataset_n=6000)
         reqs = run.requests(args.n, lam_scale=args.lam_scale,
                             seed=args.seed)
-        rb = RouteBalance(RBConfig(weights=w), run.bundle(), run.tiers)
-        m = run.run_cell(rb, reqs, seed=args.seed)
+        eng = run.engine(run.policy(args.policy, **policy_kw),
+                         deployment=args.deployment)
+        m = run.run_cell(eng, reqs, seed=args.seed)
         m["scenario"] = args.scenario
         m["n_instances"] = run.n_instances
     else:
@@ -67,8 +89,11 @@ def main():
         reqs = make_requests(
             ds, "test", make_arrivals(args.arrivals, args.lam, args.n,
                                       seed=args.seed))
-        rb = RouteBalance(RBConfig(weights=w), bundle, tiers)
-        m = run_cell(rb, tiers, names, reqs, seed=args.seed)
+        policy = fit_policy(args.policy, bundle, tiers, names, ds,
+                            **policy_kw)
+        eng = ServingEngine(policy, bundle, tiers,
+                            EngineConfig(deployment=args.deployment))
+        m = run_cell(eng, tiers, names, reqs, seed=args.seed)
     print(json.dumps({k: v for k, v in m.items()
                       if not isinstance(v, tuple)}, indent=1,
                      default=str))

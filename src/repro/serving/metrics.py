@@ -1,5 +1,5 @@
 """Per-cell metric aggregation: the paper's four axes + residual
-decomposition + tails."""
+decomposition + tails + per-tenant SLO breakdowns."""
 from __future__ import annotations
 
 from typing import Dict, List, Optional
@@ -43,6 +43,7 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
                        + r.sched_stats_fetch + r.router_queue_wait)
                       for r in done])
     return {
+        "tenants": tenant_breakdown(reqs, wall, slo_s=slo_s),
         "n": len(done), "failed": len(failed),
         "quality": float(lookup_q.mean()) if len(done) else 0.0,
         "served_quality": float(served_q.mean()) if len(done) else 0.0,
@@ -68,3 +69,33 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
         "residual_router_queue": float(np.mean(
             [r.router_queue_wait for r in done])) if done else 0.0,
     }
+
+
+def tenant_breakdown(reqs: List[Request], wall: Optional[float],
+                     slo_s: float = 30.0) -> Dict[str, Dict]:
+    """Per-`TenantSpec` SLO view of a cell: one entry per tenant class
+    in the trace (empty dict for single-class streams built outside the
+    scenario subsystem), with the latency tail and goodput the tenant
+    actually experienced — the multi-tenant isolation axis the
+    composite scenarios exist to expose. Surfaced as `t_<name>_p50` /
+    `_p99` / `_goodput` columns in `BENCH_sweep.json` and
+    `BENCH_frontier.json`."""
+    names = sorted({r.tenant for r in reqs if r.tenant is not None})
+    out: Dict[str, Dict] = {}
+    for name in names:
+        mine = [r for r in reqs if r.tenant == name]
+        done = [r for r in mine
+                if r.finish_time is not None and not r.failed]
+        e2e = np.array([r.e2e for r in done])
+        out[name] = {
+            "n": len(done),
+            "failed": sum(r.failed for r in mine),
+            "p50_e2e": _pct(e2e, 50),
+            "p99_e2e": _pct(e2e, 99),
+            "goodput": (float((e2e <= slo_s).sum()) / wall
+                        if wall and len(done) else 0.0),
+            "quality": (float(np.mean([r.lookup_quality()
+                                       for r in done]))
+                        if done else 0.0),
+        }
+    return out

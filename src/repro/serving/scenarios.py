@@ -276,6 +276,7 @@ class ScenarioRun:
         self.world = world
         self.ds = ds
         self._bundle = None
+        self._train_data = None
 
     @property
     def n_instances(self) -> int:
@@ -288,6 +289,32 @@ class ScenarioRun:
             self._bundle = EstimatorBundle.train(
                 self.ds, self.tiers, self.names, **kw)
         return self._bundle
+
+    def train_data(self):
+        """(emb, Q, L, prices) for fitting decoupled baseline routers
+        on this world's shared supervision (cached)."""
+        if self._train_data is None:
+            from repro.core.policies import train_data
+            self._train_data = train_data(self.bundle(), self.ds,
+                                          self.tiers, self.names)
+        return self._train_data
+
+    def policy(self, name: str, **kw):
+        """A fitted `SchedulingPolicy` from the registry for this
+        world: `make_policy(name, **kw)` trained on `train_data()`."""
+        from repro.core.policies import make_policy
+        return make_policy(name, **kw).fit(*self.train_data())
+
+    def engine(self, policy, deployment: str = "windowed", **engine_kw):
+        """A `ServingEngine` over this world's roster. `policy` is a
+        registry name (fitted via `self.policy`) or an already-built
+        `SchedulingPolicy`."""
+        from repro.core import EngineConfig, ServingEngine
+        if isinstance(policy, str):
+            policy = self.policy(policy)
+        return ServingEngine(policy, self.bundle(), self.tiers,
+                             EngineConfig(deployment=deployment,
+                                          **engine_kw))
 
     def requests(self, n: int, lam_scale: float = 1.0, seed: int = 0
                  ) -> List[Request]:

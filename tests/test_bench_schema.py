@@ -2,9 +2,13 @@
 machine-comparable across PRs: `benchmarks.common.csv_row` /
 `flush_json` produce {module, n_req_per_cell, rows[...]}, each row
 {name, us_per_call, derived, <parsed k=v floats>}. The committed
-BENCH_hotpath.json and BENCH_sweep.json must conform — and the sweep
-must cover the frontier grid the fused-by-default graduation relied
-on."""
+BENCH_hotpath.json, BENCH_sweep.json, BENCH_frontier.json and
+BENCH_ladder.json must conform — the sweep must cover the frontier
+grid the fused-by-default graduation relied on, the frontier must
+carry the policy/deployment/per-tenant columns of the SchedulingPolicy
+redesign, and the ladder must show the §6.3 separation (serial
+as-published deployments collapsing under load while the equalized
+concurrent arms hold) through the one engine."""
 import json
 import pathlib
 
@@ -104,6 +108,9 @@ def test_bench_sweep_artifact_schema_and_grid():
                      "parity_np", "full_reseeds", "delta_syncs",
                      "carries") + BREAKDOWN_COLS):
             assert col in r, f"{r['name']} missing {col}"
+        # scenario streams are tenant-stamped: per-TenantSpec SLO
+        # columns (PR 5) ride on every cell row
+        assert _tenant_names(r), f"{r['name']} lost tenant columns"
         # both probes are exact-parity guarantees since the
         # epsilon-quantized tie-break (numpy included)
         assert r["parity"] == pytest.approx(1.0)
@@ -123,3 +130,99 @@ def test_bench_sweep_artifact_schema_and_grid():
     assert len(loads) >= 3, loads
     assert len(scenes) >= 2, scenes
     assert len(rows) >= len(weights) * len(loads) * len(scenes)
+
+
+def _tenant_names(row):
+    """Tenant classes whose p50/p99/goodput triple is complete."""
+    names = {k[len("t_"):-len("_p99")] for k in row
+             if k.startswith("t_") and k.endswith("_p99")}
+    for n in names:
+        for suffix in ("p50", "p99", "goodput"):
+            assert f"t_{n}_{suffix}" in row, (row["name"], n, suffix)
+            assert row[f"t_{n}_{suffix}"] >= 0
+    return names
+
+
+def test_bench_frontier_artifact_schema_and_grid():
+    """The equalized frontier: every cell row self-identifies its
+    policy and deployment, carries per-tenant SLO columns, and the grid
+    spans RouteBalance's weight family plus the decoupled baselines
+    over >= 2 scenarios x >= 3 loads — all through the one engine."""
+    doc = _load("BENCH_frontier.json")
+    _check_schema(doc, "frontier")
+    rows = doc["rows"]
+    policies, deployments, scenes, loads = set(), set(), set(), set()
+    for r in rows:
+        for col in ("policy", "deployment", "lam", "q", "e2e",
+                    "p99_e2e", "cost", "tput", "goodput", "failed"):
+            assert col in r, f"{r['name']} missing {col}"
+        assert r["p99_e2e"] >= 0 and r["tput"] >= 0
+        policies.add(r["policy"])
+        deployments.add(r["deployment"])
+        # frontier/<scene>_<cell>_x<scale>
+        body = r["name"].split("/", 1)[1]
+        stem, scale = body.rsplit("_x", 1)
+        scenes.add(stem.split("_", 1)[0])
+        loads.add(float(scale))
+        assert _tenant_names(r), f"{r['name']} lost tenant columns"
+    assert "routebalance" in policies, policies
+    assert len(policies - {"routebalance"}) >= 3, policies   # baselines
+    # RouteBalance runs windowed; the baselines run the equalized
+    # concurrent arm — one engine, two deployments on the same grid
+    assert {"windowed", "concurrent"} <= deployments, deployments
+    assert len(scenes) >= 2, scenes
+    assert len(loads) >= 3, loads
+    # the multitenant scenario really breaks out its tenant classes
+    mt = [r for r in rows if r["name"].startswith("frontier/multitenant")]
+    assert mt and all(len(_tenant_names(r)) >= 2 for r in mt)
+
+
+def test_bench_ladder_artifact_schema_and_separation():
+    """The §6.3 deployment ladder through the one engine: the
+    as-published serial deployments degrade under load while the
+    engineering-equalized concurrent variants hold with routing
+    byte-identical, and the bounded-queue vLLM-SR arm fails requests
+    at load."""
+    doc = _load("BENCH_ladder.json")
+    _check_schema(doc, "ladder")
+    rows = {r["name"]: r for r in doc["rows"]}
+    for r in rows.values():
+        for col in ("policy", "deployment", "lam", "e2e", "resid",
+                    "fail", "q", "goodput"):
+            assert col in r, f"{r['name']} missing {col}"
+
+    def cell(name, lam):
+        return rows[f"ladder/{name}@{lam}"]
+
+    for lam in (12, 24, 30):
+        assert cell("bestroute_serial", lam)["deployment"] == \
+            "serial_published"
+        assert cell("bestroute_concurrent", lam)["deployment"] == \
+            "concurrent"
+        # routing is byte-identical across the ladder: same policy
+        # family, same quality — only the serving arm moves
+        assert cell("bestroute_serial", lam)["q"] == pytest.approx(
+            cell("bestroute_concurrent", lam)["q"], abs=0.02)
+    # serial-as-published collapses: the scoring station dominates e2e
+    # (the paper's 23x-class separation) and grows with load
+    s12, s30 = (cell("bestroute_serial", lam) for lam in (12, 30))
+    c12, c30 = (cell("bestroute_concurrent", lam) for lam in (12, 30))
+    assert s30["e2e"] > 10 * c30["e2e"], (s30["e2e"], c30["e2e"])
+    assert s30["e2e"] > s12["e2e"]
+    assert s30["resid"] > 10 * c30["resid"]
+    assert s30["goodput"] < c30["goodput"] / 10
+    # ...while the equalized concurrent arm holds under load
+    assert c30["e2e"] <= 1.5 * c12["e2e"], (c12["e2e"], c30["e2e"])
+    assert c30["goodput"] >= c12["goodput"]
+    # avengers: the lighter scorer shows the same residual blow-up
+    assert cell("avengers_serial", 30)["resid"] > \
+        10 * cell("avengers_concurrent", 30)["resid"]
+    # the bounded-queue external classifier drops requests at load
+    assert cell("vllm_sr", 30)["fail"] > 0
+    assert cell("vllm_sr", 12)["fail"] == 0
+    # RouteBalance's amortized batch scoring meets the requirement by
+    # construction: windowed deployment, sub-second residual
+    for lam in (12, 24, 30):
+        rb = cell("rb_uniform", lam)
+        assert rb["deployment"] == "windowed"
+        assert rb["resid"] < 1.0

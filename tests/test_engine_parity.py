@@ -1,0 +1,367 @@
+"""Differential parity: every baseline policy run through the shared
+`ServingEngine` must reproduce the LEGACY `core/pipeline.py` scheduler
+assignment for assignment — same instance, same dispatch/finish times,
+same drops — on seeded scenarios. The legacy implementation (dict
+telemetry snapshots, per-group encoder forwards, per-request dispatcher
+dict scans) is FROZEN HERE as the reference, the same idiom as the
+vectorized-BestRoute regression pin in `test_scheduler.py`; the live
+`core/pipeline.py` is a deprecation shim onto the engine.
+
+Covers the three station deployments of the §6.3 ladder (serial /
+microbatch / concurrent), the bounded-queue drop path (vLLM-SR), the
+full router x dispatcher grid, and multi-tenant scenario streams
+(fast subset in tier-1, full grid under `-m slow`). Also pins the
+shim's DeprecationWarning and the POLICIES registry surface.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, POLICIES, PipelineConfig,
+                        PipelineScheduler, RouteBalance, RBConfig,
+                        ServingEngine, make_policy, make_requests,
+                        run_cell)
+from repro.core.budget import max_tokens_clamp
+from repro.core.policies import train_data
+from repro.serving.workload import poisson_arrivals
+
+
+# -- the frozen legacy reference ----------------------------------------------
+# Verbatim pre-redesign `core/pipeline.py` + dict-based dispatchers:
+# router station -> dispatcher -> instance over per-instance telemetry
+# dict snapshots, one encoder forward per scored group.
+
+class _LegacyRR:
+    def __init__(self):
+        self._n = 0
+
+    def pick(self, candidates, telemetry):
+        i = self._n % len(candidates)
+        self._n += 1
+        return i
+
+
+class _LegacySQ:
+    def pick(self, candidates, telemetry):
+        loads = []
+        for inst in candidates:
+            s = telemetry.get(inst.iid, inst.telemetry())
+            loads.append(s["queue_depth"] * 1000 + s["pending_decode"])
+        return int(np.argmin(loads))
+
+
+class _LegacyRandom:
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+
+    def pick(self, candidates, telemetry):
+        return int(self.rng.integers(0, len(candidates)))
+
+
+_LEGACY_DISPATCH = {"rr": _LegacyRR, "sq": _LegacySQ,
+                    "random": _LegacyRandom}
+
+
+class _LegacyPipelineScheduler:
+    def __init__(self, router, dispatcher, bundle, tiers,
+                 deployment="serial", n_workers=32, microbatch_size=64,
+                 microbatch_time=1.72, queue_capacity=None,
+                 budget_clamp=True):
+        self.router = router
+        self.dispatcher = dispatcher
+        self.bundle = bundle
+        self.deployment = deployment
+        self.microbatch_size = microbatch_size
+        self.microbatch_time = microbatch_time
+        self.queue_capacity = queue_capacity
+        self.budget_clamp = budget_clamp
+        self.sim = None
+        self.queue = []
+        self.busy_servers = 0
+        self.n_servers = (1 if deployment in ("serial", "microbatch")
+                          else n_workers)
+
+    def attach(self, sim):
+        self.sim = sim
+
+    def enqueue(self, req, t):
+        cap = self.queue_capacity
+        if cap is not None and len(self.queue) >= cap:
+            req.failed = True
+            self.sim.completed.append(req)
+            return
+        self.queue.append(req)
+        self._drain(t)
+
+    def _service_time(self, n):
+        if self.deployment == "microbatch":
+            return self.microbatch_time
+        return self.router.serial_scoring_s
+
+    def _drain(self, t):
+        while self.queue and self.busy_servers < self.n_servers:
+            if self.deployment == "microbatch":
+                n = min(len(self.queue), self.microbatch_size)
+            elif self.deployment == "concurrent":
+                n = min(len(self.queue),
+                        max(1, len(self.queue) // self.n_servers))
+                n = min(n, 8)
+            else:
+                n = 1
+            group = self.queue[:n]
+            self.queue = self.queue[n:]
+            self.busy_servers += 1
+            dt = self._service_time(n)
+            self.sim.push(t + dt, lambda tt, g=group: self._scored(g, tt))
+
+    def _scored(self, group, t):
+        from repro.estimators.embedding import pad_tokens
+        self.busy_servers -= 1
+        toks = pad_tokens([r.prompt.tokens for r in group],
+                          self.bundle.encoder.max_len)
+        lens = np.array([min(len(r.prompt.tokens),
+                             self.bundle.encoder.max_len)
+                         for r in group])
+        emb = self.bundle.encoder.encode(toks, lens)
+        models = self.router.route(emb)
+        _, L = self.bundle.knn.query(emb)
+        tel = self.sim.telemetry()
+        for j, req in enumerate(group):
+            req.router_queue_wait = t - req.arrival
+            m = int(models[j])
+            cands = [i for i in self.sim.alive_instances()
+                     if m < 0 or i.model_idx == m]
+            if not cands:
+                cands = self.sim.alive_instances()
+            pick = self.dispatcher.pick(cands, tel)
+            inst = cands[pick]
+            pred = float(L[j, inst.model_idx])
+            mt = None
+            if self.budget_clamp:
+                mt = max_tokens_clamp(req.budget, req.prompt.len_in,
+                                      inst.tier.price_in,
+                                      inst.tier.price_out)
+            inst.submit(req, t, pred, mt)
+        self._drain(t)
+
+
+# -- harness ------------------------------------------------------------------
+
+ROUTER_KW = {"avengers": dict(p_w=0.8, n_clusters=16),
+             "bestroute": dict(threshold=0.5),
+             "passthrough": {}}
+
+
+def _legacy_router(name, ctx):
+    from repro.core.routers import AvengersProRouter, BestRouteRouter, \
+        PassthroughRouter
+    cls = {"avengers": AvengersProRouter, "bestroute": BestRouteRouter,
+           "passthrough": PassthroughRouter}[name]
+    r = cls(**ROUTER_KW[name])
+    return r.fit(*_train(ctx))
+
+
+_TRAIN_CACHE = {}
+
+
+def _train(ctx):
+    key = id(ctx["bundle"])
+    if key not in _TRAIN_CACHE:
+        _TRAIN_CACHE[key] = train_data(ctx["bundle"], ctx["ds"],
+                                       ctx["tiers"], ctx["names"])
+    return _TRAIN_CACHE[key]
+
+
+def _trajectory(reqs):
+    return [(r.rid, r.instance, r.model_idx, r.dispatch_time,
+             r.finish_time, r.tokens_out, bool(r.failed),
+             round(r.router_queue_wait, 12)) for r in reqs]
+
+
+def _run_pair(ctx, rname, dname, deployment, lam=16.0, n=80, seed=0,
+              queue_capacity=None, serial_scoring_s=None):
+    """Run the same seeded stream through the frozen legacy scheduler
+    and the engine-backed policy; return both trajectories."""
+    out = []
+    for which in ("legacy", "engine"):
+        reqs = make_requests(ctx["ds"], "test",
+                             poisson_arrivals(lam, n, seed=seed))
+        if which == "legacy":
+            router = _legacy_router(rname, ctx)
+            if serial_scoring_s is not None:
+                router.serial_scoring_s = serial_scoring_s
+            sched = _LegacyPipelineScheduler(
+                router, _LEGACY_DISPATCH[dname](), ctx["bundle"],
+                ctx["tiers"],
+                deployment={"serial_published": "serial"}.get(
+                    deployment, deployment),
+                queue_capacity=queue_capacity)
+        else:
+            policy = make_policy(f"{rname}-{dname}",
+                                 **ROUTER_KW[rname]).fit(*_train(ctx))
+            if serial_scoring_s is not None:
+                policy.router.serial_scoring_s = serial_scoring_s
+            sched = ServingEngine(
+                policy, ctx["bundle"], ctx["tiers"],
+                EngineConfig(deployment=deployment,
+                             queue_capacity=queue_capacity))
+        run_cell(sched, ctx["tiers"], ctx["names"], reqs, seed=0)
+        out.append(_trajectory(reqs))
+    return out
+
+
+# -- tier-1 subset ------------------------------------------------------------
+
+@pytest.mark.parametrize("rname,dname,deployment", [
+    ("bestroute", "sq", "serial_published"),
+    ("bestroute", "rr", "microbatch"),
+    ("avengers", "sq", "concurrent"),
+    ("passthrough", "random", "concurrent"),
+    ("passthrough", "rr", "serial_published"),
+])
+def test_engine_matches_legacy_pipeline(small_ctx, rname, dname,
+                                        deployment):
+    legacy, engine = _run_pair(small_ctx, rname, dname, deployment)
+    assert engine == legacy
+
+
+def test_engine_matches_legacy_bounded_queue_drops(small_ctx):
+    """The vLLM-SR arm: an overloaded bounded queue must drop exactly
+    the same requests."""
+    legacy, engine = _run_pair(small_ctx, "passthrough", "rr",
+                               "serial_published", lam=20.0, n=100,
+                               queue_capacity=8, serial_scoring_s=0.5)
+    assert engine == legacy
+    assert any(t[6] for t in engine)          # some requests dropped
+
+
+def test_pipeline_shim_is_engine_and_warns(small_ctx):
+    from repro.core.dispatchers import RoundRobin
+    from repro.core.routers import BestRouteRouter
+    router = BestRouteRouter(threshold=0.5).fit(*_train(small_ctx))
+    with pytest.warns(DeprecationWarning):
+        sched = PipelineScheduler(router, RoundRobin(),
+                                  small_ctx["bundle"], small_ctx["tiers"],
+                                  PipelineConfig(deployment="serial"))
+    assert isinstance(sched, ServingEngine)
+    assert sched.ecfg.deployment == "serial_published"
+
+
+def _fitted_policy(ctx, name, **kw):
+    return make_policy(name, **ROUTER_KW.get(name.rsplit("-", 1)[0], {}),
+                       **kw).fit(*_train(ctx))
+
+
+def test_policies_registry_covers_grid_and_routebalance():
+    """Every router x dispatcher combination plus RouteBalance resolves
+    through the registry to a SchedulingPolicy."""
+    from repro.core import RouteBalancePolicy, SchedulingPolicy
+    from repro.core.policies import RouterDispatchPolicy
+    expect = {f"{r}-{d}" for r in ("avengers", "bestroute", "passthrough")
+              for d in ("rr", "sq", "random")} | {"routebalance"}
+    assert expect <= set(POLICIES)
+    rb = make_policy("routebalance", weights=(0.5, 0.3, 0.2))
+    assert isinstance(rb, RouteBalancePolicy)
+    for name in expect - {"routebalance"}:
+        p = make_policy(name)
+        assert isinstance(p, RouterDispatchPolicy), name
+        assert isinstance(p, SchedulingPolicy)
+        assert p.name.split("-")[-1] == name.split("-")[-1]
+
+
+def test_routebalance_engine_overrides_reach_registry_engines(small_ctx):
+    """RBConfig's batch-formation knobs must bind wherever the policy
+    is mounted — a registry-built ServingEngine, not just the
+    RouteBalance convenience class (regression: they were silently
+    dropped on the registry path)."""
+    policy = make_policy("routebalance", fixed_batch=8, adaptive=False,
+                         base_window=0.05, charge_compute=False)
+    eng = ServingEngine(policy, small_ctx["bundle"], small_ctx["tiers"],
+                        EngineConfig(deployment="windowed"))
+    assert eng.ecfg.fixed_batch == 8
+    assert eng.ecfg.adaptive is False
+    assert eng.ecfg.base_window == 0.05
+    assert eng.ecfg.charge_compute is False
+    # and the two construction paths agree end to end
+    def cell(sched):
+        reqs = make_requests(small_ctx["ds"], "test",
+                             poisson_arrivals(12.0, 40, seed=4))
+        run_cell(sched, small_ctx["tiers"], small_ctx["names"], reqs,
+                 seed=0)
+        return _trajectory(reqs)
+    via_registry = cell(ServingEngine(
+        make_policy("routebalance", fixed_batch=8, adaptive=False,
+                    charge_compute=False),
+        small_ctx["bundle"], small_ctx["tiers"], EngineConfig()))
+    via_class = cell(RouteBalance(
+        RBConfig(fixed_batch=8, adaptive=False, charge_compute=False),
+        small_ctx["bundle"], small_ctx["tiers"]))
+    assert via_registry == via_class
+
+
+def test_routebalance_is_engine_backed(small_ctx):
+    """RouteBalance is the windowed deployment of RouteBalancePolicy on
+    the same engine the baselines use."""
+    rb = RouteBalance(RBConfig(), small_ctx["bundle"], small_ctx["tiers"])
+    assert isinstance(rb, ServingEngine)
+    assert rb.ecfg.deployment == "windowed"
+    assert rb.policy.name == "routebalance"
+
+
+def test_baseline_policy_runs_windowed(small_ctx):
+    """Deployment is policy-orthogonal: a decoupled baseline runs under
+    the windowed (amortized batch scoring) deployment too."""
+    eng = ServingEngine(_fitted_policy(small_ctx, "bestroute-sq"),
+                        small_ctx["bundle"], small_ctx["tiers"],
+                        EngineConfig(deployment="windowed"))
+    reqs = make_requests(small_ctx["ds"], "test",
+                         poisson_arrivals(12.0, 60, seed=1))
+    m = run_cell(eng, small_ctx["tiers"], small_ctx["names"], reqs)
+    assert m["n"] == 60 and m["failed"] == 0
+    assert m["policy"] == "best-route-sq"
+    assert m["deployment"] == "windowed"
+    # windowed deployments charge the batch-formation residuals, not
+    # the router station queue
+    assert m["residual_router_queue"] == 0.0
+    assert m["residual_batch_wait"] > 0.0
+
+
+# -- slow grid ----------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("deployment", ["serial_published", "microbatch",
+                                        "concurrent"])
+def test_engine_matches_legacy_full_grid(small_ctx, deployment):
+    for rname in ("avengers", "bestroute", "passthrough"):
+        for dname in ("rr", "sq", "random"):
+            legacy, engine = _run_pair(small_ctx, rname, dname,
+                                       deployment, lam=14.0, n=120,
+                                       seed=3)
+            assert engine == legacy, (rname, dname, deployment)
+
+
+@pytest.mark.slow
+def test_engine_matches_legacy_on_scenario_stream(small_ctx):
+    """Multi-tenant composite traces (tenant-stamped, budget-mixed)
+    through both paths."""
+    from repro.serving.scenarios import get_scenario
+    run = get_scenario("multitenant").build(dataset_n=400)
+    bundle = run.bundle()
+    tdata = run.train_data()
+    for which in ("legacy", "engine"):
+        reqs = run.requests(150, seed=5)
+        if which == "legacy":
+            from repro.core.routers import BestRouteRouter
+            sched = _LegacyPipelineScheduler(
+                BestRouteRouter(threshold=0.5).fit(*tdata),
+                _LegacySQ(), bundle, run.tiers, deployment="concurrent")
+        else:
+            sched = run.engine(run.policy("bestroute-sq", threshold=0.5),
+                               deployment="concurrent")
+        m = run_cell(sched, run.tiers, run.names, reqs, seed=0)
+        if which == "legacy":
+            legacy = _trajectory(reqs)
+        else:
+            engine = _trajectory(reqs)
+            assert set(m["tenants"]) == {t.name
+                                         for t in run.scenario.tenants}
+    assert engine == legacy
