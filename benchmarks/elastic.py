@@ -1,0 +1,155 @@
+"""Cost-vs-SLO frontier under overload control: the elastic worlds of
+`repro.serving.scenarios` (diurnal square wave + flash crowd) swept over
+admission/autoscaling arms on the fused backend.
+
+Each scenario runs a ladder of arms on ONE built world (same roster,
+same trained bundle, same request stream per load):
+
+  * ``static``  — overload control disarmed: the base fleet takes the
+    full trace (reserves stay cold, everything is admitted). The
+    baseline the paper-style static rosters would produce;
+  * ``shed``    — SLO-aware admission shedding only (no autoscaling):
+    what priority classes buy when capacity cannot grow;
+  * ``elastic_lag<L>`` — shedding + autoscaler with scale-up lag L
+    seconds: the cost-vs-SLO frontier's elasticity axis. Slower
+    provisioning means more of the burst is absorbed by shedding, so
+    shed_rate rises with L while peak_alive stays the same.
+
+Rows carry the new overload axes — ``shed_rate``, ``scale_ups`` /
+``scale_downs`` / ``peak_alive``, ``scale_up_lag_s``, per-priority
+goodput/shed/SLO-attainment columns (``prio<k>_*``) — next to the usual
+latency/cost/goodput columns, landing in ``BENCH_elastic.json``.
+``roster_reseeds`` counts the fused hot path's alive-mask resyncs from
+scale events; ``compiles`` pins that roster churn added ZERO XLA
+compiles (one program per pow2 R bucket, asserted against the observed
+bucket count).
+
+Smoke mode for CI: REPRO_ELASTIC_SMOKE=1 trims to one load and small
+cells while keeping every arm, so the artifact schema stays pinned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from .common import csv_row
+from repro.core import RBConfig, RouteBalance
+from repro.core.decision_jax import bucket_pow2
+from repro.serving.cluster import ClusterSim
+from repro.serving.overload import OverloadConfig
+from repro.serving.scenarios import ElasticSpec, get_scenario
+
+SMOKE = os.environ.get("REPRO_ELASTIC_SMOKE", "") not in ("", "0")
+SCENES = ("diurnal_elastic", "flashcrowd_elastic")
+LOADS = (3.0,) if SMOKE else (2.0, 4.0)   # multiples of the nominal rate
+LAGS = (0.5, 2.0, 4.0)                    # provisioning delay sweep (s)
+# cells are sized by TIME, not request count: the trace must actually
+# reach the flash burst (t=4s) / the diurnal high phase, and raising
+# lam_scale compresses a fixed-n trace instead of lengthening the
+# overload window
+HORIZON_S = 14.0 if SMOKE else 24.0
+DATASET_N = 300 if SMOKE else 1500
+
+
+def _n_cell(lam: float, scale: float) -> int:
+    return max(int(lam * scale * HORIZON_S), 200)
+
+
+def _arms(base: ElasticSpec):
+    """(name, ElasticSpec) ladder: static -> shed-only -> elastic at
+    each scale-up lag. All arms share the same expanded roster (the
+    reserves exist but stay cold when autoscale is off), so rows differ
+    only in control policy."""
+    cfg = base.overload
+    yield "static", dataclasses.replace(
+        base, overload=dataclasses.replace(cfg, autoscale=False,
+                                           shed_enabled=False))
+    yield "shed", dataclasses.replace(
+        base, overload=dataclasses.replace(cfg, autoscale=False,
+                                           shed_enabled=True))
+    for lag in LAGS:
+        yield f"elastic_lag{lag:g}", dataclasses.replace(
+            base, overload=dataclasses.replace(cfg, autoscale=True,
+                                               shed_enabled=True,
+                                               scale_up_lag_s=lag))
+
+
+def _prio_cols(m) -> str:
+    parts = []
+    for p, pm in sorted(m.get("priorities", {}).items()):
+        parts.append(f"prio{p}_goodput={pm['goodput']:.2f}")
+        parts.append(f"prio{p}_shed={pm['shed']}")
+        parts.append(f"prio{p}_slo={pm['slo_attainment']:.3f}")
+    return "".join(";" + p for p in parts)
+
+
+def main():
+    for scene in SCENES:
+        sc = get_scenario(scene)
+        run = sc.build(dataset_n=DATASET_N)
+        bundle = run.bundle()
+        base = sc.elastic
+        i_base = run.n_instances - len(run.reserve_iids)
+        # deterministic warm-up: compile the pow2 R buckets the
+        # overloaded cells reach, outside the measured cells (the fused
+        # runner is cached on the bundle, so every arm reuses these)
+        warm_reqs = run.requests(128, seed=99)
+        warm = RouteBalance(RBConfig(charge_compute=False), bundle,
+                            run.tiers)
+        warm.sim = ClusterSim(run.tiers, run.names, seed=0)
+        seen_buckets = {8, 16, 32, 64, 128}
+        for R in sorted(seen_buckets):
+            warm._decide_core(warm_reqs[:R])
+        for scale in LOADS:
+            n_cell = _n_cell(sc.lam, scale)
+            for arm, spec in _arms(base):
+                run.elastic = spec
+                # fresh request objects per arm: dispatch/finish state
+                # is written in place by the sim
+                reqs = run.requests(n_cell, lam_scale=scale, seed=0)
+                rb = RouteBalance(RBConfig(charge_compute=False),
+                                  bundle, run.tiers)
+                m = run.run_cell(rb, reqs, seed=0)
+                st = rb._fused.stats if rb._fused is not None else {}
+                buckets = {bucket_pow2(s) for s, _ in rb.compute_log}
+                seen_buckets |= buckets
+                compiles = (rb._fused.compile_count()
+                            if rb._fused is not None else 0)
+                csv_row(
+                    f"elastic/{scene}_{arm}_x{scale:g}",
+                    m.get("measured_decide_ms_mean", 0.0) * 1e3,
+                    f"lam={sc.lam * scale:.1f}"
+                    f";I_base={i_base}"
+                    f";I_max={run.n_instances}"
+                    f";peak_alive={m.get('peak_alive', i_base)}"
+                    f";shed_rate={m['shed_rate']:.4f}"
+                    f";shed={m['shed']}"
+                    f";scale_ups={m.get('scale_ups', 0)}"
+                    f";scale_downs={m.get('scale_downs', 0)}"
+                    f";scale_up_lag_s={m.get('scale_up_lag_s', 0.0):g}"
+                    f";p50_e2e={m['p50_e2e']:.3f}"
+                    f";p99_e2e={m['p99_e2e']:.3f}"
+                    f";goodput={m['goodput']:.2f}"
+                    f";tput={m['throughput']:.2f}"
+                    f";cost={m['cost_per_req']:.3e}"
+                    f";failed={m['failed']}"
+                    f";roster_reseeds={st.get('roster_reseed', 0)}"
+                    f";compiles={compiles}"
+                    f";r_buckets={len(buckets)}"
+                    + _prio_cols(m))
+                # the no-recompile-on-scale gate: the runner is cached
+                # on the bundle, so its compile count is cumulative
+                # across arms and must never exceed one program per
+                # pow2 R bucket ever seen — autoscaler roster churn
+                # (scale_ups > 0 in the elastic arms) adds nothing
+                assert compiles <= len(seen_buckets), (
+                    "roster churn must not add XLA compiles: "
+                    f"{compiles} programs for {len(seen_buckets)} "
+                    "R buckets")
+        run.elastic = base
+
+
+if __name__ == "__main__":
+    from .common import flush_json
+    main()
+    flush_json("elastic")

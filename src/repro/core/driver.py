@@ -6,7 +6,7 @@ One ``run_cell`` = one configuration cell of the paper's evaluation
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -52,11 +52,18 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
              requests: List[Request], seed: int = 0,
              fail_at: Optional[Dict] = None,
              schedule: Optional[Sequence] = None,
-             schedule_seed: int = 0) -> Dict:
+             schedule_seed: int = 0,
+             setup: Optional[Callable[[ClusterSim], None]] = None) -> Dict:
     """fail_at: optional {time: t, instances: [iids]} failure injection.
     schedule: optional scenario perturbation schedule (a sequence of
-    `repro.serving.scenarios.FailureEvent`) armed on the sim."""
+    `repro.serving.scenarios.FailureEvent`) armed on the sim.
+    setup: optional hook called on the fresh sim before the scheduler
+    attaches — the arming point for overload control
+    (`repro.serving.overload.arm_elastic`) and other sim-scoped
+    controllers."""
     sim = ClusterSim(list(tiers), model_names, seed=seed)
+    if setup is not None:
+        setup(sim)
     if hasattr(scheduler, "expected"):
         scheduler.expected = len(requests)
     scheduler.attach(sim)
@@ -90,4 +97,10 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
         out["measured_decide_ms_per_req"] = float(
             times.sum() / max(sizes.sum(), 1) * 1e3)
         out["mean_batch_size"] = float(sizes.mean())
+    ctl = getattr(sim, "overload", None)
+    if ctl is not None:
+        out["scale_ups"] = ctl.scale_ups
+        out["scale_downs"] = ctl.scale_downs
+        out["scale_up_lag_s"] = ctl.cfg.scale_up_lag_s
+        out["peak_alive"] = ctl.peak_alive
     return out

@@ -186,6 +186,16 @@ class SchedulingPolicy:
     def on_attach(self, sim: ClusterSim):
         """New roster: drop per-roster compiled/cached state."""
 
+    def shed_verdict(self, req: Request, controller) -> bool:
+        """Admission-control hook, consulted by the engine BEFORE the
+        request can join batch formation whenever the sim carries an
+        overload controller (`sim.overload`). The default defers to the
+        controller's SLO-aware per-priority verdict; a policy may veto
+        shedding (return False), tighten it, or reimplement it — the
+        verdict is policy-visible state, like every other scheduling
+        decision."""
+        return controller.wants_shed(req.priority)
+
     def assign(self, batch: BatchView, cluster: ClusterSim
                ) -> AssignmentResult:
         raise NotImplementedError
@@ -222,6 +232,7 @@ class ServingEngine:
         self.sim: Optional[ClusterSim] = None
         self._measured_compute = 0.004  # warm estimate, updated online
         self.decisions = 0
+        self.shed_count = 0             # refused at admission (overload)
         self.batches = 0
         self.expected: Optional[int] = None   # stop firing once all served
         self.compute_log: List[Tuple[int, float]] = []
@@ -256,7 +267,24 @@ class ServingEngine:
         self._wait_cols = False if self.waiting else None
         sim.push(self.ecfg.base_window, self._fire)
 
+    def _maybe_shed(self, req: Request, t: float) -> bool:
+        """Overload admission control, ahead of batch formation for
+        every deployment: when the sim carries an `ElasticController`
+        (`sim.overload`, armed by `repro.serving.overload.arm_elastic`)
+        the policy's shed verdict runs on arrival. Shed requests never
+        reach a decision batch — they leave immediately, marked
+        `shed` (charged to `shed_rate`, not to failures)."""
+        ctl = getattr(self.sim, "overload", None)
+        if ctl is None or not self.policy.shed_verdict(req, ctl):
+            return False
+        ctl.record_shed(req, t)
+        self.shed_count += 1
+        self.sim.completed.append(req)
+        return True
+
     def enqueue(self, req: Request, t: float):
+        if self._maybe_shed(req, t):
+            return
         if self.ecfg.deployment != "windowed":
             self._enqueue_station(req, t)
             return
@@ -321,8 +349,8 @@ class ServingEngine:
                                       + 0.2 * dt_meas)
             self.compute_log.append((len(batch), dt_meas))
         if (self.expected is not None and not self.waiting
-                and self.decisions >= self.expected):
-            return                          # all requests dispatched
+                and self.decisions + self.shed_count >= self.expected):
+            return              # all requests dispatched (or shed)
         self.sim.push(t + self._window(), self._fire)
 
     def _decide(self, batch: List[Request], t: float, cols=None,

@@ -71,6 +71,7 @@ from .decision_jax import _greedy_scan, bucket_pow2
 def _new_stats() -> Dict:
     return {"calls": 0, "host_s": 0.0, "stage_s": 0.0, "dispatch_s": 0.0,
             "device_s": 0.0, "sync_s": 0.0, "full_reseed": 0,
+            "roster_reseed": 0,        # full reseeds caused by roster churn
             "delta_sync": 0, "delta_rows": 0, "carry": 0}
 
 
@@ -303,6 +304,14 @@ class FusedHotPath:
         self._seen_roster = -1
         self.stats = _new_stats()
 
+    def compile_count(self) -> int:
+        """Number of XLA programs compiled for the fused step — one per
+        pow2 R bucket seen. Roster events (fail/recover/autoscale) flip
+        the alive mask and reseed the mirror but must NOT add entries
+        here: that is the no-recompile-on-scale contract the elastic
+        soak asserts (`compile_count() == len(distinct R buckets)`)."""
+        return int(self._step._cache_size())
+
     def _stage_buffers(self, Rb: int) -> Dict[str, np.ndarray]:
         """The preallocated host staging set for the pow2 batch bucket.
         Two sets alternate per bucket so writing batch N+1 can never
@@ -356,11 +365,18 @@ class FusedHotPath:
         # (rb.sim = ClusterSim(...) without attach()) must reseed — the
         # new view's counters can look "older" than the mirror's and
         # would otherwise silently carry the previous cluster's state
-        if (self._state is not None and tel is self._seen_tel
-                and tel.roster_version == self._seen_roster):
-            rows = tel.dirty_rows(self._seen_version)
-            if 2 * len(rows) > self._n_real:
-                rows = None                  # mostly dirty: reseed outright
+        if self._state is not None and tel is self._seen_tel:
+            if tel.roster_version == self._seen_roster:
+                rows = tel.dirty_rows(self._seen_version)
+                if 2 * len(rows) > self._n_real:
+                    rows = None              # mostly dirty: reseed outright
+            else:
+                # fail/recover/autoscale flipped the alive mask: the
+                # reseed is roster-caused — kill() deliberately does not
+                # stamp last_write, so a delta read would miss the dead
+                # row; this counter is what lets the elastic soak assert
+                # scale events resync WITHOUT recompiling
+                st["roster_reseed"] += 1
         self._seen_version = tel.version
         if rows is None:
             self._seen_tel = tel

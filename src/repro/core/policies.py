@@ -44,10 +44,11 @@ class RouterDispatchPolicy(SchedulingPolicy):
     marshaling (the legacy `core/pipeline.py` hot spot)."""
 
     def __init__(self, router: Router, dispatcher: Dispatcher,
-                 budget_clamp: bool = True):
+                 budget_clamp: bool = True, shed: bool = True):
         self.router = router
         self.dispatcher = dispatcher
         self.budget_clamp = budget_clamp
+        self.shed = shed            # honor overload admission control
         self.bundle = None
         self._model_of_slot: Optional[np.ndarray] = None
 
@@ -68,6 +69,14 @@ class RouterDispatchPolicy(SchedulingPolicy):
     def on_attach(self, sim: ClusterSim):
         self._model_of_slot = np.array(
             [i.model_idx for i in sim.instances], np.int64)
+
+    def shed_verdict(self, req, controller) -> bool:
+        # shedding is policy-visible: a baseline built with shed=False
+        # admits everything even on an elastic sim (the "no admission
+        # control" arm of the overload benches)
+        if not self.shed:
+            return False
+        return controller.wants_shed(req.priority)
 
     def assign(self, batch: BatchView, cluster: ClusterSim
                ) -> AssignmentResult:
@@ -115,10 +124,10 @@ _DISPATCHERS: Dict[str, Callable[[], Dispatcher]] = {
 
 
 def _router_dispatch_factory(rname: str, dname: str):
-    def make(budget_clamp: bool = True, **router_kw):
+    def make(budget_clamp: bool = True, shed: bool = True, **router_kw):
         return RouterDispatchPolicy(_ROUTERS[rname](**router_kw),
                                     _DISPATCHERS[dname](),
-                                    budget_clamp=budget_clamp)
+                                    budget_clamp=budget_clamp, shed=shed)
     make.__doc__ = f"{rname} router -> {dname} dispatcher baseline"
     return make
 

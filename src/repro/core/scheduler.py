@@ -57,6 +57,9 @@ class RBConfig:
     #                                    (numpy | jax | pallas); staged
     #                                    backends only — fused has the
     #                                    estimator feed in-graph
+    shed: bool = True                  # honor overload admission control
+    #                                    when the sim carries an
+    #                                    ElasticController (sim.overload)
 
 
 class EstimatorBundle:
@@ -175,6 +178,13 @@ class RouteBalancePolicy(SchedulingPolicy):
 
     def on_attach(self, sim: ClusterSim):
         self._fused = None                    # new sim -> new roster
+
+    def shed_verdict(self, req: Request, controller) -> bool:
+        # policy-visible admission control (RBConfig.shed): the
+        # no-shedding ablation admits everything even under overload
+        if not self.cfg.shed:
+            return False
+        return controller.wants_shed(req.priority)
 
     def assign(self, batch: BatchView, cluster: ClusterSim
                ) -> AssignmentResult:

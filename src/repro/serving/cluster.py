@@ -13,10 +13,11 @@ dead reckoning exists to correct.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -117,7 +118,9 @@ class Instance:
         self.model_idx = model_idx
         self.sim = sim
         self.slot = 0               # row in ClusterSim.tel (set by the sim)
-        self.queue: List[Tuple[Request, float]] = []   # (req, pred_len)
+        # FIFO of (req, pred_len); deque so _admit pops are O(1) even
+        # when overload piles thousands of requests behind one instance
+        self.queue: Deque[Tuple[Request, float]] = collections.deque()
         self.running: List[_Seq] = []
         self.iter_scheduled = False
         self.busy_until = 0.0
@@ -156,9 +159,11 @@ class Instance:
         """Admit queued requests into free slots; returns prefill seconds."""
         dt = 0.0
         while self.queue and len(self.running) < self.tier.max_batch:
-            req, pred_len = self.queue.pop(0)
+            req, pred_len = self.queue.popleft()
             true_len = int(req.true_length[self.model_idx])
-            max_tok = req.max_tokens or 10 ** 9
+            # None means "no dispatch-time clamp"; 0 is a real (1-token,
+            # see the post-increment limit check) budget, not unlimited
+            max_tok = req.max_tokens if req.max_tokens is not None else 10 ** 9
             budget_tok = None
             if req.budget is not None:
                 # streaming early-stop: remaining budget at output prices
@@ -202,7 +207,9 @@ class Instance:
         self.snapshot = {
             "queue_depth": len(self.queue),
             "pending_decode": float(sum(
-                max(min(s.max_tokens, int(s.req.pred_len or s.max_tokens))
+                max(min(s.max_tokens,
+                        int(s.req.pred_len) if s.req.pred_len is not None
+                        else s.max_tokens)
                     - s.generated, 1) for s in self.running)),
             "batch_size": len(self.running),
             "free_slots": self.tier.max_batch - len(self.running),
@@ -220,17 +227,26 @@ class Instance:
             self.iter_scheduled = True
 
     def fail(self):
-        """Node failure: mark dead; running + queued requests fail."""
+        """Node failure: mark dead; running + queued requests fail.
+
+        Failed requests get the failure instant stamped as their
+        finish_time — they really do leave the system at that moment,
+        and metrics' wall-clock span and per-tenant denominators would
+        otherwise skew on failure-heavy cells."""
         self.alive = False
         self.sim.tel.kill(self.slot)
         for s in self.running:
             s.req.failed = True
+            if s.req.finish_time is None:
+                s.req.finish_time = self.sim.now
             self.sim.completed.append(s.req)
         for req, _ in self.queue:
             req.failed = True
+            if req.finish_time is None:
+                req.finish_time = self.sim.now
             self.sim.completed.append(req)
         self.running = []
-        self.queue = []
+        self.queue.clear()
 
     def recover(self, t: float):
         """Node recovery: re-enter the roster with a genuinely clean

@@ -19,8 +19,10 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
               slo_s: float = 30.0) -> Dict:
     """`slo_s`: end-to-end latency SLO for the goodput metric (served
     requests finishing within the SLO, per wall second)."""
-    done = [r for r in reqs if r.finish_time is not None and not r.failed]
+    done = [r for r in reqs
+            if r.finish_time is not None and not r.failed and not r.shed]
     failed = [r for r in reqs if r.failed]
+    shed = [r for r in reqs if r.shed]
     e2e = np.array([r.e2e for r in done])
     ttft = np.array([r.ttft for r in done if r.ttft is not None])
     lookup_q = np.array([r.lookup_quality() for r in done])
@@ -31,9 +33,13 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
         t = tier_by_model[model_names[r.model_idx]]
         costs.append(t.cost(r.prompt.len_in, r.tokens_out))
     costs = np.asarray(costs)
-    if wall is None and done:
-        wall = max(r.finish_time for r in done) \
-            - min(r.arrival for r in reqs)
+    if wall is None:
+        # span over EVERY request that left the system (served or
+        # failed) — a done-only max under-reports the wall on
+        # failure-heavy cells and inflates goodput/throughput
+        ends = [r.finish_time for r in reqs if r.finish_time is not None]
+        if ends:
+            wall = max(ends) - min(r.arrival for r in reqs)
     mix = {}
     for r in done:
         m = model_names[r.model_idx]
@@ -44,7 +50,10 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
                       for r in done])
     return {
         "tenants": tenant_breakdown(reqs, wall, slo_s=slo_s),
+        "priorities": priority_breakdown(reqs, wall, slo_s=slo_s),
         "n": len(done), "failed": len(failed),
+        "shed": len(shed),
+        "shed_rate": len(shed) / max(len(reqs), 1),
         "quality": float(lookup_q.mean()) if len(done) else 0.0,
         "served_quality": float(served_q.mean()) if len(done) else 0.0,
         "mean_e2e": float(e2e.mean()) if len(done) else float("nan"),
@@ -85,17 +94,51 @@ def tenant_breakdown(reqs: List[Request], wall: Optional[float],
     for name in names:
         mine = [r for r in reqs if r.tenant == name]
         done = [r for r in mine
-                if r.finish_time is not None and not r.failed]
+                if r.finish_time is not None and not r.failed
+                and not r.shed]
         e2e = np.array([r.e2e for r in done])
+        within = int((e2e <= slo_s).sum()) if len(done) else 0
         out[name] = {
             "n": len(done),
             "failed": sum(r.failed for r in mine),
+            "shed": sum(r.shed for r in mine),
             "p50_e2e": _pct(e2e, 50),
             "p99_e2e": _pct(e2e, 99),
-            "goodput": (float((e2e <= slo_s).sum()) / wall
-                        if wall and len(done) else 0.0),
+            "goodput": (within / wall if wall and len(done) else 0.0),
+            # SLO attainment over everything the tenant SENT — failed
+            # and shed requests count against the tenant, not nowhere
+            "slo_attainment": within / max(len(mine), 1),
             "quality": (float(np.mean([r.lookup_quality()
                                        for r in done]))
                         if done else 0.0),
+        }
+    return out
+
+
+def priority_breakdown(reqs: List[Request], wall: Optional[float],
+                       slo_s: float = 30.0) -> Dict[int, Dict]:
+    """Per-priority-class SLO view (0 = premium): what admission
+    shedding buys the premium class and charges the batch class.
+    Surfaced as `prio<k>_goodput` / `prio<k>_shed` columns in
+    `BENCH_elastic.json`. Empty for single-class streams (all
+    priority 0, no sheds) to keep legacy cells noise-free."""
+    classes = sorted({int(r.priority) for r in reqs})
+    if classes == [0] and not any(r.shed for r in reqs):
+        return {}
+    out: Dict[int, Dict] = {}
+    for p in classes:
+        mine = [r for r in reqs if int(r.priority) == p]
+        done = [r for r in mine
+                if r.finish_time is not None and not r.failed
+                and not r.shed]
+        e2e = np.array([r.e2e for r in done])
+        within = int((e2e <= slo_s).sum()) if len(done) else 0
+        out[p] = {
+            "n": len(mine),
+            "shed": sum(r.shed for r in mine),
+            "failed": sum(r.failed for r in mine),
+            "p99_e2e": _pct(e2e, 99),
+            "goodput": (within / wall if wall and len(done) else 0.0),
+            "slo_attainment": within / max(len(mine), 1),
         }
     return out

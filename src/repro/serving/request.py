@@ -166,6 +166,7 @@ class Request:
     true_length: np.ndarray        # (M,) hidden from the scheduler
     budget: Optional[float] = None  # USD, optional per-request cost budget
     tenant: Optional[str] = None   # tenant class in composite scenarios
+    priority: int = 0              # SLO class for shedding (0 = premium)
 
     # SoA ingest columns (set by RequestColumns.from_requests)
     cols: Optional[RequestColumns] = dataclasses.field(
@@ -196,6 +197,7 @@ class Request:
     tokens_out: int = 0
     exhausted: bool = False        # stopped by budget early-stop/clamp
     failed: bool = False
+    shed: bool = False             # refused at admission by overload control
 
     # scheduler-side accounting (off-instance residual decomposition)
     sched_compute: float = 0.0

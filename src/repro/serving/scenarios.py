@@ -39,6 +39,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from .cluster import ClusterSim
+from .overload import OverloadConfig, arm_elastic, provision_reserve
 from .request import Request
 from .tiers import Tier, paper_pool_tiers
 from .workload import make_arrivals, sample_budgets
@@ -115,6 +116,7 @@ class TenantSpec:
     len_band: Optional[Tuple[float, float]] = None  # len_in quantile band
     budget_frac: float = 0.0                     # P(request has a budget)
     budget_range: Tuple[float, float] = (2e-5, 4e-4)   # log-uniform USD
+    priority: int = 0        # SLO class for admission shedding (0=premium)
 
 
 def _tenant_prompt_pool(prompts, tenant: TenantSpec) -> np.ndarray:
@@ -158,7 +160,7 @@ def build_requests(ds: Dataset, tenants: Tuple[TenantSpec, ...], n: int,
                 rid=0, prompt=prompts[j], arrival=float(arr[i]),
                 true_quality=Q[j], true_length=L[j],
                 budget=None if np.isnan(budgets[i]) else float(budgets[i]),
-                tenant=ten.name))
+                tenant=ten.name, priority=ten.priority))
     reqs.sort(key=lambda r: r.arrival)
     for i, r in enumerate(reqs):
         r.rid = i
@@ -238,6 +240,17 @@ def randomize_telemetry(sim: ClusterSim, seed: int,
 # -- scenarios ----------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class ElasticSpec:
+    """Overload control for a scenario: `reserve` pre-provisioned cold
+    instances added to the roster (spread by `provision_reserve` — size
+    them to stay inside the fused hot path's pow2-I bucket) plus the
+    detector/autoscaler/shedding config armed on every sim the scenario
+    builds."""
+    reserve: int = 4
+    overload: OverloadConfig = OverloadConfig()
+
+
+@dataclasses.dataclass(frozen=True)
 class Scenario:
     """A full serving world: roster + composite workload + perturbation
     schedule. `build()` materializes the pool, world and dataset."""
@@ -247,6 +260,7 @@ class Scenario:
     n_instances: int = 13
     tenants: Tuple[TenantSpec, ...] = (TenantSpec("all", 12.0),)
     schedule: Tuple[FailureEvent, ...] = ()
+    elastic: Optional[ElasticSpec] = None   # overload control, if any
     seed: int = 0
 
     @property
@@ -260,8 +274,13 @@ class Scenario:
         else:
             tiers, names, world = synthetic_pool(
                 self.n_tiers, self.n_instances, seed=self.seed)
+        reserve_iids: Tuple[str, ...] = ()
+        if self.elastic is not None:
+            tiers, reserve_iids = provision_reserve(
+                tiers, self.elastic.reserve)
         ds = build_dataset(world, n=dataset_n, seed=self.seed + 1)
-        return ScenarioRun(self, tiers, names, world, ds)
+        return ScenarioRun(self, tiers, names, world, ds,
+                           reserve_iids=reserve_iids)
 
 
 class ScenarioRun:
@@ -269,12 +288,18 @@ class ScenarioRun:
     the estimator stack and run cells against it."""
 
     def __init__(self, scenario: Scenario, tiers: List[Tier],
-                 names: List[str], world: World, ds: Dataset):
+                 names: List[str], world: World, ds: Dataset,
+                 reserve_iids: Tuple[str, ...] = ()):
         self.scenario = scenario
         self.tiers = tiers
         self.names = names
         self.world = world
         self.ds = ds
+        self.reserve_iids = reserve_iids
+        # mutable copy of the scenario's overload control so one built
+        # world can be re-armed per experiment arm (the elastic bench
+        # sweeps scale_up_lag_s / shed on a single trained bundle)
+        self.elastic: Optional[ElasticSpec] = scenario.elastic
         self._bundle = None
         self._train_data = None
 
@@ -321,8 +346,16 @@ class ScenarioRun:
         return build_requests(self.ds, self.scenario.tenants, n,
                               lam_scale=lam_scale, seed=seed)
 
+    def arm(self, sim: ClusterSim) -> ClusterSim:
+        """Arm this run's overload control (if any) on a sim: reserves
+        go cold, the detector loop starts, `sim.overload` is set."""
+        if self.elastic is not None:
+            arm_elastic(sim, self.elastic.overload, self.reserve_iids)
+        return sim
+
     def sim(self, seed: int = 0) -> ClusterSim:
         s = ClusterSim(self.tiers, self.names, seed=seed)
+        self.arm(s)
         apply_schedule(s, self.scenario.schedule,
                        seed=self.scenario.seed + seed)
         return s
@@ -333,7 +366,8 @@ class ScenarioRun:
         from repro.core import run_cell
         return run_cell(scheduler, self.tiers, self.names, reqs,
                         seed=seed, schedule=self.scenario.schedule,
-                        schedule_seed=self.scenario.seed + seed)
+                        schedule_seed=self.scenario.seed + seed,
+                        setup=self.arm)
 
 
 def random_scenario(seed: int, max_tiers: int = 16,
@@ -443,6 +477,40 @@ SCENARIOS: Dict[str, Scenario] = {
                        arrival_kw=(("cv", 2.0),)),
             TenantSpec("batch", 10.0, budget_frac=0.4),
         )),
+    # Elastic worlds: overload control armed on every sim. The 6-base
+    # + 2-reserve roster is deliberate — bucket_pow2(6) == bucket_pow2
+    # (8) == 8, so the autoscaler's whole range rides one compiled
+    # fused-hot-path I bucket (the no-recompile-on-scale contract the
+    # elastic soak asserts), and the small fleet actually overloads
+    # during the diurnal peaks / flash burst instead of absorbing them.
+    "diurnal_elastic": Scenario(
+        name="diurnal_elastic", pool="synthetic", n_tiers=4,
+        n_instances=6, seed=5,
+        tenants=(
+            TenantSpec("premium", 14.0, arrival="square",
+                       arrival_kw=(("period", 20.0),
+                                   ("high_frac", 1.8)),
+                       priority=0),
+            TenantSpec("standard", 8.0, arrival="gamma",
+                       arrival_kw=(("cv", 2.5),), priority=1),
+            TenantSpec("batch", 6.0, budget_frac=0.6,
+                       budget_range=(1e-5, 1.5e-4), priority=2),
+        ),
+        elastic=ElasticSpec(reserve=2, overload=OverloadConfig())),
+    "flashcrowd_elastic": Scenario(
+        name="flashcrowd_elastic", pool="synthetic", n_tiers=4,
+        n_instances=6, seed=6,
+        tenants=(
+            TenantSpec("premium", 9.0, arrival="flash",
+                       arrival_kw=(("burst_start", 4.0),
+                                   ("burst_dur", 6.0),
+                                   ("burst_mult", 5.0)),
+                       priority=0),
+            TenantSpec("batch", 7.0, budget_frac=0.5, priority=2),
+        ),
+        elastic=ElasticSpec(
+            reserve=2,
+            overload=OverloadConfig(up_patience=1, cooldown_s=1.0))),
 }
 
 

@@ -226,3 +226,56 @@ def test_bench_ladder_artifact_schema_and_separation():
         rb = cell("rb_uniform", lam)
         assert rb["deployment"] == "windowed"
         assert rb["resid"] < 1.0
+
+
+def test_bench_elastic_artifact_schema_and_frontier():
+    """The overload-control frontier: every cell row carries the new
+    shed/autoscale axes plus per-priority SLO columns, the arm ladder
+    (static / shed / elastic at each scale-up lag) is complete per
+    scenario x load, and the no-recompile-on-scale contract is pinned
+    in the committed artifact itself."""
+    doc = _load("BENCH_elastic.json")
+    _check_schema(doc, "elastic")
+    rows = doc["rows"]
+    scenes, arms, lags = set(), set(), set()
+    for r in rows:
+        for col in ("lam", "I_base", "I_max", "peak_alive", "shed_rate",
+                    "shed", "scale_ups", "scale_downs", "scale_up_lag_s",
+                    "p50_e2e", "p99_e2e", "goodput", "tput", "cost",
+                    "failed", "roster_reseeds", "compiles", "r_buckets"):
+            assert col in r, f"{r['name']} missing {col}"
+        assert 0 <= r["shed_rate"] <= 1
+        assert r["I_base"] < r["I_max"]
+        assert r["I_base"] <= r["peak_alive"] <= r["I_max"]
+        # elastic/<scene>_<arm>_x<scale>
+        body = r["name"].split("/", 1)[1]
+        stem, _ = body.rsplit("_x", 1)
+        scene, arm = stem.split("_elastic_", 1)
+        scenes.add(scene + "_elastic")
+        arms.add(arm.split("_lag")[0] if "_lag" in arm else arm)
+        if "_lag" in arm:
+            lags.add(float(arm.split("_lag")[1]))
+        # per-priority goodput/shed/SLO triples are complete
+        prios = {k[len("prio"):-len("_shed")] for k in r
+                 if k.startswith("prio") and k.endswith("_shed")}
+        assert prios, f"{r['name']} lost priority columns"
+        for p in prios:
+            for suffix in ("goodput", "shed", "slo"):
+                assert f"prio{p}_{suffix}" in r, (r["name"], p, suffix)
+        assert "0" in prios          # the premium class always reported
+        # the static arm never scales or sheds; the elastic arms did
+        # scale up without adding a single XLA compile
+        if arm == "static":
+            assert r["scale_ups"] == 0 and r["shed"] == 0
+        if arm.startswith("elastic"):
+            assert r["scale_ups"] > 0
+            assert r["roster_reseeds"] > 0
+        assert r["compiles"] <= 5    # one program per warmed pow2 bucket
+    assert scenes == {"diurnal_elastic", "flashcrowd_elastic"}, scenes
+    assert arms == {"static", "shed", "elastic"}, arms
+    assert len(lags) >= 3, lags
+    # SLO-aware ordering: wherever anything was shed, the premium class
+    # keeps a SLO attainment >= the best-effort class's
+    for r in rows:
+        if r["shed"] > 0 and "prio2_slo" in r:
+            assert r["prio0_slo"] >= r["prio2_slo"], r["name"]

@@ -117,3 +117,78 @@ def test_isolation_arms_run(ctx):
                           ctx["tiers"])
         m = run_cell(rb, ctx["tiers"], ctx["names"], _reqs(ctx, n=80))
         assert m["n"] == 80 and m["failed"] == 0
+
+
+# -- hot-path edge cases pinned against the overload-control sweep ------------
+
+def _lone_instance(seed=0):
+    """One-tier, one-instance sim for driving Instance directly."""
+    from repro.serving.cluster import ClusterSim
+    from repro.serving.scenarios import synthetic_pool
+    tiers, names, _ = synthetic_pool(1, 1, seed=seed)
+    sim = ClusterSim(tiers, names, seed=0)
+    return sim, sim.instances[0]
+
+
+def test_zero_token_clamp_is_not_unlimited(ctx):
+    """max_tokens=0 is a real (1-token, given the post-increment limit
+    check) clamp, not 'unlimited': the falsy `max_tokens or 10**9`
+    admission bug ran such requests to their full target length."""
+    sim, inst = _lone_instance()
+    r = _reqs(ctx, n=1)[0]
+    r.true_length = np.full_like(r.true_length, 500.0)
+    inst.submit(r, 0.0, pred_len=5.0, max_tokens=0)
+    sim.run()
+    assert r.tokens_out == 1
+    assert r.exhausted and not r.failed
+    assert r.finish_time is not None
+
+
+def test_zero_pred_len_pending_decode_is_one(ctx):
+    """pred_len=0.0 must count as ~1 pending decode token in the
+    telemetry snapshot — the falsy `pred_len or max_tokens` fallback
+    charged it as the full 10**9 dispatch clamp, blinding load_score."""
+    sim, inst = _lone_instance()
+    r = _reqs(ctx, n=1)[0]
+    r.true_length = np.full_like(r.true_length, 500.0)
+    inst.submit(r, 0.0, pred_len=0.0, max_tokens=None)
+    sim.run(until=0.0)                # first _iterate: admit + 1 token
+    assert len(inst.running) == 1     # still decoding
+    assert inst.snapshot["pending_decode"] == 1.0
+
+
+def test_fail_stamps_finish_time_on_queued_and_running(ctx):
+    """Instance.fail() stamps the failure instant as finish_time —
+    failed requests really leave the system then, and the metrics
+    wall-clock fallback / tenant denominators read it."""
+    from repro.serving.metrics import aggregate
+    sim, inst = _lone_instance()
+    reqs = _reqs(ctx, lam=50.0, n=3)
+    inst.busy_until = 100.0           # pin admission: all three queue up
+    for r in reqs:
+        inst.submit(r, r.arrival, pred_len=20.0, max_tokens=None)
+    sim.push(2.5, lambda t: inst.fail())
+    sim.run(until=3.0)
+    assert all(r.failed and r.finish_time == 2.5 for r in reqs)
+    m = aggregate(reqs, sim.tiers, sim.model_names, wall=None)
+    assert m["failed"] == 3           # wall fallback no longer crashes /
+    assert np.isfinite(m["throughput"])  # skews on all-failed cells
+
+
+def test_admission_queue_is_fifo(ctx):
+    """The admission queue is a deque (O(1) pops) and stays strictly
+    FIFO: with one decode slot, requests finish in submission order."""
+    import collections
+    import dataclasses as _dc
+    sim, inst = _lone_instance()
+    assert isinstance(inst.queue, collections.deque)
+    inst.tier = _dc.replace(inst.tier, max_batch=1)
+    reqs = _reqs(ctx, lam=100.0, n=4)
+    for r in reqs:
+        r.true_length = np.full_like(r.true_length, 4.0)
+        inst.submit(r, r.arrival, pred_len=4.0, max_tokens=None)
+    sim.run()
+    finishes = [r.finish_time for r in reqs]
+    assert all(f is not None for f in finishes)
+    assert finishes == sorted(finishes)
+    assert [r.tokens_out for r in reqs] == [4] * 4
