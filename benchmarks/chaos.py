@@ -1,0 +1,224 @@
+"""Goodput under fault campaigns: the chaos harness benchmark.
+
+Every campaign from `repro.serving.faults.CHAOS_SUITES` runs an arm
+ladder on ONE built chaos world (same roster, same trained bundle, same
+request stream), isolating what each layer of the recovery stack buys:
+
+  * ``clean``       — recovery armed, NO faults: the fault-free ceiling
+    (also the overhead reference for ``perf_guard``'s fault-free probe);
+  * ``lost``        — the campaign fires with recovery DISARMED: every
+    victim's in-flight work is terminally failed. The lost-work floor;
+  * ``retry``       — bounded retry/requeue with seeded exponential
+    backoff, hedging off;
+  * ``retry_hedge`` — retry plus deadline-based hedged re-dispatch and
+    the telemetry watchdog. The full stack.
+
+Rows carry goodput/latency next to the lifecycle axes — ``retried``,
+``gave_up``, ``hedges``, ``duplicate_tokens``, ``wasted_tokens``,
+``quarantines``, ``degraded_decisions`` — plus the fused hot path's
+``compiles`` pin: kill/revive/quarantine churn must ride the alive-mask
+(one program per pow2 R bucket, never a recompile).
+
+The headline acceptance gate (asserted here, pinned again in
+``tests/test_bench_schema.py``): under ``crash_storm``, the full stack
+recovers at least 90% of the goodput the lost-work arm gives up,
+
+    g_retry_hedge >= g_lost + 0.9 * (g_clean - g_lost).
+
+``controller_crash`` is the odd one out: the scheduler process itself
+dies mid-trace (`simulate_controller_crash`), a fresh engine resumes
+from the checkpoint tree, and the row reports whether the completion
+set came back bitwise identical to an uninterrupted reference run.
+
+Smoke mode for CI: REPRO_CHAOS_SMOKE=1 trims the cell size while
+keeping every campaign and arm, so the artifact schema stays pinned.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+from .common import csv_row
+from repro.core import RBConfig, RouteBalance
+from repro.core.decision_jax import bucket_pow2
+from repro.serving.cluster import ClusterSim
+from repro.serving.faults import (CHAOS_SUITES, chaos_world,
+                                  straggler_storm)
+from repro.serving.recovery import (RecoveryConfig, arm_recovery,
+                                    simulate_controller_crash)
+from repro.serving.scenarios import apply_schedule
+
+SMOKE = os.environ.get("REPRO_CHAOS_SMOKE", "") not in ("", "0")
+N_CELL = 160 if SMOKE else 420
+CAMPAIGNS = ("crash_storm", "correlated_failure", "telemetry_blackout",
+             "straggler_storm")
+RETRY = RecoveryConfig(hedge=False)
+HEDGED = RecoveryConfig()
+ARMS = (("lost", None), ("retry", RETRY), ("retry_hedge", HEDGED))
+
+
+def _campaign(name, tiers):
+    if name == "straggler_storm":
+        # hedging is a TAIL tool: a few instances slow to a crawl while
+        # the fast majority has headroom to absorb the re-dispatches.
+        # (Sweeping most of the fleet instead just moves the crunch to
+        # the survivors — hedges then add load, not cover.)
+        return straggler_storm(tiers, frac=0.25, factor=8.0,
+                               duration=10.0)
+    return CHAOS_SUITES[name](tiers)
+
+
+def _cell(run, schedule, recovery):
+    run.recovery = recovery
+    run.scenario = dataclasses.replace(run.scenario, schedule=schedule)
+    reqs = run.requests(N_CELL, seed=0)
+    rb = RouteBalance(RBConfig(charge_compute=False), run.bundle(),
+                      run.tiers)
+    m = run.run_cell(rb, reqs, seed=0)
+    return m, rb
+
+
+def _row(name, m, rb, seen_buckets, extra=""):
+    buckets = {bucket_pow2(s) for s, _ in rb.compute_log}
+    seen_buckets |= buckets
+    compiles = (rb._fused.compile_count()
+                if rb._fused is not None else 0)
+    # fault churn must never reach XLA: the runner is cached on the
+    # bundle, so its compile count is cumulative across arms and must
+    # stay one program per pow2 R bucket ever seen
+    assert compiles <= len(seen_buckets), (
+        "fault churn must not add XLA compiles: "
+        f"{compiles} programs for {len(seen_buckets)} R buckets")
+    csv_row(
+        name,
+        m.get("measured_decide_ms_mean", 0.0) * 1e3,
+        f"goodput={m['goodput']:.3f}"
+        f";tput={m['throughput']:.2f}"
+        f";p50_e2e={m['p50_e2e']:.3f}"
+        f";p99_e2e={m['p99_e2e']:.3f}"
+        f";served={m['n']}"
+        f";failed={m['failed']}"
+        f";retried={m['retried']}"
+        f";gave_up={m.get('gave_up', 0)}"
+        f";hedges={m.get('hedges', 0)}"
+        f";duplicate_tokens={m.get('duplicate_tokens', 0)}"
+        f";wasted_tokens={m['wasted_tokens']}"
+        f";quarantines={m.get('quarantines', 0)}"
+        f";degraded_decisions={m.get('degraded_decisions', 0)}"
+        f";compiles={compiles}"
+        f";r_buckets={len(seen_buckets)}"
+        + extra)
+    return m["goodput"]
+
+
+def _controller_crash_row(run, seen_buckets):
+    """Crash the scheduler mid-trace, resume a fresh engine from the
+    checkpoint taken at the crash instant, and report whether the
+    completion set is bitwise identical to an uninterrupted run."""
+    sched = CHAOS_SUITES["crash_storm"](run.tiers)
+    n = min(N_CELL, 160)
+
+    def cell(crash_at=None):
+        reqs = run.requests(n, seed=0)
+        sim = ClusterSim(run.tiers, run.names, seed=0)
+        arm_recovery(sim, HEDGED)
+        eng = RouteBalance(RBConfig(charge_compute=False), run.bundle(),
+                           run.tiers)
+        eng.expected = len(reqs)
+        eng.attach(sim)
+        holder = {"eng": eng}
+        for r in reqs:
+            sim.push(r.arrival,
+                     lambda t, rr=r: holder["eng"].enqueue(rr, t))
+        apply_schedule(sim, sched, seed=run.scenario.seed)
+        dropped = [0]
+        if crash_at is not None:
+            def crash(t):
+                tree = holder["eng"].checkpoint_tree()
+                dropped[0] = simulate_controller_crash(
+                    sim, holder["eng"])
+                arm_recovery(sim, HEDGED)
+                eng2 = RouteBalance(RBConfig(charge_compute=False),
+                                    run.bundle(), run.tiers)
+                eng2.resume(sim, tree, reqs)
+                holder["eng"] = eng2
+            sim.push(crash_at, crash)
+        sim.run()
+        fp = [(r.rid, r.finish_time, r.tokens_out, r.instance,
+               r.failed, r.attempt, r.hedges) for r in reqs]
+        served = sum(1 for r in reqs
+                     if r.finish_time is not None and not r.failed)
+        return fp, served, dropped[0], holder["eng"]
+
+    ref, served_ref, _, _ = cell()
+    crash_at = 5.3                       # mid-storm, retries in flight
+    got, served, dropped, eng = cell(crash_at=crash_at)
+    identical = int(got == ref)
+    assert identical, "crash/restore diverged from uninterrupted run"
+    assert dropped > 0, "controller crash dropped no scheduler events"
+    csv_row(
+        "chaos/controller_crash_restore",
+        0.0,
+        f"identical={identical}"
+        f";crash_at={crash_at:g}"
+        f";dropped_events={dropped}"
+        f";served={served}"
+        f";served_ref={served_ref}"
+        f";n={n}")
+
+
+def main():
+    sc = chaos_world()
+    run = sc.build(dataset_n=300 if SMOKE else 600)
+    bundle = run.bundle()
+    base_scenario = run.scenario
+    # deterministic warm-up outside the measured cells: compile the
+    # pow2 R buckets the windowed cells reach (runner cached on bundle)
+    warm = RouteBalance(RBConfig(charge_compute=False), bundle,
+                        run.tiers)
+    warm.sim = ClusterSim(run.tiers, run.names, seed=0)
+    warm_reqs = run.requests(64, seed=99)
+    seen_buckets = set()
+    for R in (8, 16, 32, 64):
+        warm._decide_core(warm_reqs[:R])
+        seen_buckets.add(bucket_pow2(R))
+    try:
+        m, rb = _cell(run, (), RecoveryConfig())
+        g_clean = _row("chaos/clean", m, rb, seen_buckets)
+        goodput = {}
+        for camp in CAMPAIGNS:
+            sched = _campaign(camp, run.tiers)
+            for arm, recovery in ARMS:
+                m, rb = _cell(run, sched, recovery)
+                goodput[arm] = _row(f"chaos/{camp}_{arm}", m, rb,
+                                    seen_buckets)
+            # recovered_frac is only meaningful when the campaign cost
+            # the lost-work arm real goodput; below the noise floor the
+            # stack has nothing to recover
+            denom = g_clean - goodput["lost"]
+            rec = ((goodput["retry_hedge"] - goodput["lost"]) / denom
+                   if denom > 0.02 * g_clean else 1.0)
+            csv_row(f"chaos/{camp}_recovery", 0.0,
+                    f"recovered_frac={rec:.3f}"
+                    f";g_clean={g_clean:.3f}"
+                    f";g_lost={goodput['lost']:.3f}"
+                    f";g_retry_hedge={goodput['retry_hedge']:.3f}")
+            if camp == "crash_storm":
+                # the headline acceptance gate: the full stack
+                # recovers >= 90% of the goodput lost work costs
+                assert goodput["retry_hedge"] >= (
+                    goodput["lost"]
+                    + 0.9 * (g_clean - goodput["lost"]) - 1e-9), (
+                    "retry+hedge recovered too little goodput: "
+                    f"{goodput['retry_hedge']:.3f} vs clean "
+                    f"{g_clean:.3f} / lost {goodput['lost']:.3f}")
+        _controller_crash_row(run, seen_buckets)
+    finally:
+        run.scenario = base_scenario
+        run.recovery = base_scenario.recovery
+
+
+if __name__ == "__main__":
+    from .common import flush_json
+    main()
+    flush_json("chaos")

@@ -29,6 +29,11 @@ machines, so CI boxes that are systematically slower than the box that
 produced the committed artifact should raise it rather than delete the
 guard. Getting *faster* than baseline never fails; rows with no
 committed counterpart are reported and skipped.
+
+A second gate covers the fault-tolerant lifecycle (PR 7): a fault-free
+cell is timed with the recovery manager armed and disarmed, and the
+armed run must stay within the same tolerance — the retry/hedge/
+watchdog hooks are only allowed to cost when faults actually fire.
 """
 from __future__ import annotations
 
@@ -64,6 +69,45 @@ def _assert_engine_api():
         "dead path"
     assert "routebalance" in POLICIES
     assert isinstance(make_policy("routebalance"), RouteBalancePolicy)
+
+
+def _recovery_overhead_guard() -> bool:
+    """Fault-free cells must not pay for the recovery hooks: one small
+    chaos-world cell, empty fault schedule, timed armed vs disarmed
+    (min-of-3 each; the sim is a single-thread Python loop, so
+    wall-clock is the honest cost of the extra per-dispatch bookkeeping
+    and the watchdog's periodic scan)."""
+    import dataclasses
+    import time
+
+    from repro.core import RBConfig, RouteBalance
+    from repro.serving.faults import chaos_world
+    from repro.serving.recovery import RecoveryConfig
+
+    sc = chaos_world()
+    run = sc.build(dataset_n=200)
+    bundle = run.bundle()
+    run.scenario = dataclasses.replace(run.scenario, schedule=())
+
+    def cell(recovery):
+        run.recovery = recovery
+        reqs = run.requests(100, seed=0)
+        rb = RouteBalance(RBConfig(charge_compute=False), bundle,
+                          run.tiers)
+        t0 = time.perf_counter()
+        m = run.run_cell(rb, reqs, seed=0)
+        assert m["failed"] == 0 and m.get("retries", 0) == 0
+        return time.perf_counter() - t0
+
+    cell(None)                          # warm-up: compiles and caches
+    off = min(cell(None) for _ in range(3))
+    on = min(cell(RecoveryConfig()) for _ in range(3))
+    ratio = on / off
+    verdict = "ok" if ratio <= TOL else "REGRESSED"
+    print(f"recovery hooks (fault-free cell): armed {on * 1e3:.1f} ms "
+          f"vs disarmed {off * 1e3:.1f} ms ({ratio:.2f}x, "
+          f"tol {TOL:.2f}x) {verdict}")
+    return ratio <= TOL
 
 
 def main() -> int:
@@ -109,6 +153,8 @@ def main() -> int:
             failures.append((name, round(ratio, 2)))
     if missing:
         print(f"# no committed baseline for {missing} (new cells pass)")
+    if not _recovery_overhead_guard():
+        failures.append(("recovery_hooks_fault_free", "overhead"))
     if failures:
         print(f"PERF REGRESSION: {failures}")
         return 1

@@ -78,8 +78,17 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
         from repro.serving.scenarios import apply_schedule
         apply_schedule(sim, schedule, seed=schedule_seed)
     sim.run()
+    # exactly-once delivery: the fault-tolerant lifecycle (retry,
+    # hedging, controller restore) must terminate every request exactly
+    # once — a double-append to `completed` means a retry raced a
+    # completion and the cell's rates are garbage
+    seen_ids = {id(r) for r in sim.completed}
+    assert len(seen_ids) == len(sim.completed), (
+        f"{len(sim.completed) - len(seen_ids)} requests "
+        "terminated more than once")
     wall = (max((r.finish_time or r.arrival) for r in requests)
-            - min(r.arrival for r in requests))
+            - min((r.first_arrival if r.first_arrival is not None
+                   else r.arrival) for r in requests))
     out = aggregate(requests, list(tiers), model_names, wall)
     # engine-backed schedulers self-identify: the policy/deployment
     # axes land in every cell row so BENCH artifacts stay comparable
@@ -103,4 +112,12 @@ def run_cell(scheduler, tiers: Sequence[Tier], model_names: List[str],
         out["scale_downs"] = ctl.scale_downs
         out["scale_up_lag_s"] = ctl.cfg.scale_up_lag_s
         out["peak_alive"] = ctl.peak_alive
+    mgr = getattr(sim, "recovery", None)
+    if mgr is not None:
+        out["retries"] = mgr.retries
+        out["gave_up"] = mgr.gave_up
+        out["hedges"] = mgr.hedges
+        out["duplicate_tokens"] = mgr.duplicate_tokens
+        out["quarantines"] = mgr.quarantines
+        out["degraded_decisions"] = mgr.degraded_decisions
     return out

@@ -81,7 +81,7 @@ class BatchView:
     shared `RequestColumns` and row indices, so policies stage with
     vectorized gathers instead of per-request Python."""
 
-    __slots__ = ("reqs", "cols", "rows", "t")
+    __slots__ = ("reqs", "cols", "rows", "t", "_attempts")
 
     def __init__(self, reqs: Sequence[Request], cols=None,
                  rows: Optional[np.ndarray] = None, t: float = 0.0):
@@ -89,9 +89,23 @@ class BatchView:
         self.cols = cols
         self.rows = rows
         self.t = t
+        self._attempts = None
 
     def __len__(self) -> int:
         return len(self.reqs)
+
+    @property
+    def attempts(self) -> np.ndarray:
+        """(R,) int64 per-request dispatch attempts beyond the first —
+        how the policy sees retries re-entering admission after an
+        instance failure (repro.serving.recovery). Zero for the fresh
+        arrivals that dominate steady state; lazily built so the hot
+        path never pays for it."""
+        if self._attempts is None:
+            self._attempts = np.fromiter(
+                (r.attempt for r in self.reqs), np.int64,
+                count=len(self.reqs))
+        return self._attempts
 
     def columns(self, encoder):
         """(cols, rows) with embeddings guaranteed — resolving the
@@ -235,6 +249,11 @@ class ServingEngine:
         self.shed_count = 0             # refused at admission (overload)
         self.batches = 0
         self.expected: Optional[int] = None   # stop firing once all served
+        # windowed fire-loop liveness: the loop parks once the expected
+        # count is met, and a late retry/requeue must be able to revive
+        # it (repro.serving.recovery re-enters through `enqueue`)
+        self._fire_armed = False
+        self._next_fire = 0.0
         self.compute_log: List[Tuple[int, float]] = []
         # windowed deployment: the waiting queue's SoA twin — a
         # row-index buffer parallel to `self.waiting`, so a decision
@@ -257,6 +276,9 @@ class ServingEngine:
     def attach(self, sim: ClusterSim):
         self.sim = sim
         self.policy.on_attach(sim)            # new sim -> new roster
+        mgr = getattr(sim, "recovery", None)
+        if mgr is not None:
+            mgr.bind(self)       # retries requeue into us; watchdog starts
         if self.ecfg.deployment != "windowed":
             return                            # station mode drains on arrival
         self._wait_start = self._wait_n = 0
@@ -265,7 +287,15 @@ class ServingEngine:
         # `waiting` — marshal AoS until the queue drains (`_fire`'s
         # drain reset re-enables the SoA path)
         self._wait_cols = False if self.waiting else None
-        sim.push(self.ecfg.base_window, self._fire)
+        self._fire_armed = False
+        self._arm_fire(sim.now + self.ecfg.base_window)
+
+    def _arm_fire(self, t: float):
+        if self._fire_armed:
+            return
+        self._fire_armed = True
+        self._next_fire = t
+        self.sim.push(t, self._fire)
 
     def _maybe_shed(self, req: Request, t: float) -> bool:
         """Overload admission control, ahead of batch formation for
@@ -276,6 +306,11 @@ class ServingEngine:
         `shed` (charged to `shed_rate`, not to failures)."""
         ctl = getattr(self.sim, "overload", None)
         if ctl is None or not self.policy.shed_verdict(req, ctl):
+            return False
+        if req.attempt > 0:
+            # retries are never shed: the request was already admitted
+            # once — admission control gates NEW work, and shedding a
+            # victim of an instance failure would double-charge it
             return False
         ctl.record_shed(req, t)
         self.shed_count += 1
@@ -288,6 +323,11 @@ class ServingEngine:
         if self.ecfg.deployment != "windowed":
             self._enqueue_station(req, t)
             return
+        # a retry delivered after the fire loop parked (expected count
+        # met before the failure) must revive it, or the request waits
+        # forever; queueing ahead of attach() is still allowed
+        if self.sim is not None:
+            self._arm_fire(t + self.ecfg.base_window)
         self.waiting.append(req)
         cols = req.cols
         if cols is None or req.row < 0 or (
@@ -327,6 +367,7 @@ class ServingEngine:
                              0.04, 0.30))
 
     def _fire(self, t: float):
+        self._fire_armed = False
         batch = self.waiting
         if self.ecfg.fixed_batch:
             batch = batch[:self.ecfg.fixed_batch]
@@ -350,13 +391,23 @@ class ServingEngine:
             self.compute_log.append((len(batch), dt_meas))
         if (self.expected is not None and not self.waiting
                 and self.decisions + self.shed_count >= self.expected):
-            return              # all requests dispatched (or shed)
-        self.sim.push(t + self._window(), self._fire)
+            return              # all dispatched/shed; enqueue re-arms us
+        self._arm_fire(t + self._window())
+
+    def _assign(self, view: BatchView):
+        """Route one batch through the policy — or, when the telemetry
+        watchdog has declared the whole mirror dark, through the
+        recovery manager's degraded least-loaded fallback (the policy's
+        inputs are all stale; dead-reckoned occupancy is the only
+        trustworthy signal left)."""
+        mgr = getattr(self.sim, "recovery", None)
+        if mgr is not None and mgr.degraded:
+            return mgr.degraded_assign(view, self.sim)
+        return self.policy.assign(view, self.sim)
 
     def _decide(self, batch: List[Request], t: float, cols=None,
                 rows: Optional[np.ndarray] = None):
-        res = self.policy.assign(BatchView(batch, cols, rows, t),
-                                 self.sim)
+        res = self._assign(BatchView(batch, cols, rows, t))
         R = len(batch)
         I = int(self.sim.tel.alive.sum())
 
@@ -372,6 +423,7 @@ class ServingEngine:
         choice, l_chosen = res.fetch()
         instances = res.instances
         clamp = self.policy.budget_clamp
+        mgr = getattr(self.sim, "recovery", None)
         for r_idx, req in enumerate(batch):
             inst = instances[int(choice[r_idx])]
             req.sched_compute = per_req_compute
@@ -383,6 +435,8 @@ class ServingEngine:
                   if clamp else None)
             inst.submit(req, now, float(l_chosen[r_idx]), mt)
             self.decisions += 1
+            if mgr is not None:
+                mgr.watch_dispatch(req, inst, now)
         self.batches += 1
 
     # -- station deployments (§6.3 ladder) ------------------------------------
@@ -390,7 +444,8 @@ class ServingEngine:
         cap = self.ecfg.queue_capacity
         if cap is not None and len(self.queue) >= cap:
             req.failed = True
-            self.sim.completed.append(req)
+            req.finish_time = t   # terminal-state invariant: failures
+            self.sim.completed.append(req)   # carry a terminal timestamp
             return
         self.queue.append(req)
         self._drain(t)
@@ -423,10 +478,11 @@ class ServingEngine:
     def _scored(self, group: List[Request], t: float):
         self.busy_servers -= 1
         t0 = time.perf_counter()
-        res = self.policy.assign(BatchView(group, t=t), self.sim)
+        res = self._assign(BatchView(group, t=t))
         choice, l_chosen = res.fetch()
         instances = res.instances
         clamp = self.policy.budget_clamp
+        mgr = getattr(self.sim, "recovery", None)
         for j, req in enumerate(group):
             req.router_queue_wait = t - req.arrival
             inst = instances[int(choice[j])]
@@ -436,6 +492,95 @@ class ServingEngine:
                   if clamp else None)
             inst.submit(req, t, float(l_chosen[j]), mt)
             self.decisions += 1
+            if mgr is not None:
+                mgr.watch_dispatch(req, inst, t)
         self.batches += 1
         self.compute_log.append((len(group), time.perf_counter() - t0))
         self._drain(t)
+
+    # -- checkpoint/restore (windowed deployment) -----------------------------
+    # The controller's durable state — everything a fresh scheduler
+    # process needs to resume a trace exactly where a crashed one
+    # stopped — is tiny and flat: the waiting queue (rids; request
+    # payloads are replayable from the trace), the admission counters,
+    # the fire-loop clock, and the recovery manager's pending retry and
+    # hedge timers. `repro.distributed.checkpoint.CheckpointManager`
+    # persists it atomically; `resume` rebuilds a (possibly brand-new)
+    # engine onto the surviving sim. Checkpoints must be coordinated
+    # with the crash point (save at the instant the controller dies, as
+    # a write-ahead log would guarantee): state that changed after the
+    # snapshot is rolled back on the controller but not on the workers.
+
+    def checkpoint_tree(self) -> dict:
+        """The controller's durable state as a flat numpy tree (the
+        shape `_checkpoint_template` describes)."""
+        mgr = (getattr(self.sim, "recovery", None)
+               if self.sim is not None else None)
+        tree = self._checkpoint_template()
+        tree["waiting_rids"] = np.array([r.rid for r in self.waiting],
+                                        np.int64)
+        tree["counters"] = np.array(
+            [self.decisions, self.shed_count, self.batches,
+             -1 if self.expected is None else self.expected], np.int64)
+        tree["clock"] = np.array(
+            [self._next_fire if self._fire_armed else -1.0,
+             self._measured_compute], np.float64)
+        if mgr is not None:
+            tree.update(mgr.pending_state())
+        return tree
+
+    @staticmethod
+    def _checkpoint_template() -> dict:
+        """A dtype-correct skeleton of `checkpoint_tree` — what
+        `CheckpointManager.restore` needs as its `tree_like` (restore
+        takes shapes from the stored arrays, dtypes from this)."""
+        return {
+            "waiting_rids": np.zeros(0, np.int64),
+            "counters": np.zeros(4, np.int64),
+            "clock": np.zeros(2, np.float64),
+            "retry_rids": np.zeros(0, np.int64),
+            "retry_due": np.zeros(0, np.float64),
+            "watch_keys": np.zeros((0, 3), np.int64),
+            "watch_due": np.zeros(0, np.float64),
+            "watch_slot": np.zeros(0, np.int64),
+            "recovery_counters": np.zeros(7, np.int64),
+        }
+
+    def save_checkpoint(self, ckpt, step: int):
+        """Persist the controller state via a
+        `repro.distributed.checkpoint.CheckpointManager`."""
+        ckpt.save(step, self.checkpoint_tree(),
+                  metadata={"now": self.sim.now if self.sim else 0.0})
+
+    def resume(self, sim: ClusterSim, tree: dict,
+               requests: Sequence[Request]) -> "ServingEngine":
+        """Rebuild this (typically freshly constructed) engine from a
+        checkpoint onto a sim whose controller died
+        (`repro.serving.recovery.simulate_controller_crash`): worker
+        decode chains and future arrivals survived; the waiting queue,
+        counters, pending retries/hedge timers and the fire loop come
+        back from the tree. Windowed deployment only. `requests` is the
+        trace the checkpointed rids index into."""
+        assert self.ecfg.deployment == "windowed", self.ecfg.deployment
+        by_rid = {r.rid: r for r in requests}
+        c = tree["counters"]
+        self.decisions, self.shed_count, self.batches = (
+            int(c[0]), int(c[1]), int(c[2]))
+        self.expected = None if int(c[3]) < 0 else int(c[3])
+        self._measured_compute = float(tree["clock"][1])
+        self.waiting = [by_rid[int(rid)] for rid in tree["waiting_rids"]]
+        self.sim = sim
+        self.policy.on_attach(sim)
+        mgr = getattr(sim, "recovery", None)
+        if mgr is not None:
+            mgr.bind(self)
+            mgr.restore_pending(tree, by_rid)
+        self._wait_start = self._wait_n = 0
+        self._wait_cols = False if self.waiting else None
+        self._fire_armed = False
+        next_fire = float(tree["clock"][0])
+        if next_fire >= 0.0:
+            self._arm_fire(max(next_fire, sim.now))
+        elif self.waiting:
+            self._arm_fire(sim.now + self.ecfg.base_window)
+        return self

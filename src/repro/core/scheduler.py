@@ -215,7 +215,14 @@ class RouteBalancePolicy(SchedulingPolicy):
     def _decide_staged(self, batch: BatchView, sim: ClusterSim):
         cfg = self.cfg
         reqs = batch.reqs
-        instances = sim.alive_instances()
+        # candidate roster = the SCHEDULER-VISIBLE rows: tel.alive, not
+        # inst.alive — the telemetry watchdog quarantines stale rows by
+        # masking them in the mirror while the worker stays up, and the
+        # staged backends must see exactly the roster the fused backend
+        # masks (slot k <-> sim.instances[k] by construction)
+        tel = sim.tel
+        alive_rows = np.flatnonzero(tel.alive)
+        instances = [sim.instances[int(k)] for k in alive_rows]
         I = len(instances)
         R = len(reqs)
         m_of_i = np.array([inst.model_idx for inst in instances])
@@ -232,8 +239,6 @@ class RouteBalancePolicy(SchedulingPolicy):
         l_inst = L[:, m_of_i]
 
         # 2. telemetry seed from the columnar view (non-blocking)
-        tel = sim.tel
-        alive_rows = np.flatnonzero(tel.alive)
         d = tel.pending[alive_rows].copy()
         b = np.maximum(tel.batch[alive_rows], 1.0)
         free = tel.free[alive_rows].copy()

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import heapq
 import itertools
 from typing import Callable, Deque, Dict, List, Optional, Tuple
@@ -110,6 +111,26 @@ class TelemetryArrays:
         self.write(slot, pending=0.0, batch=0, free=int(self.max_batch[slot]),
                    ctx=0.0, queue=0, t=t)
 
+    def quarantine(self, slot: int):
+        """Mask a stale row exactly like a dead one (the telemetry
+        watchdog's path): an alive-mask flip + `roster_version` bump, so
+        incremental readers full-reseed with their already-compiled
+        program — quarantine churn never costs an XLA recompile. The
+        instance itself keeps serving what it has; it just receives no
+        new dispatches until the row is released."""
+        self.alive[slot] = False
+        self.version += 1
+        self.roster_version += 1
+
+    def unquarantine(self, slot: int):
+        """Release a quarantined row back into the roster. The caller
+        reseeds the row with a fresh `write` (the instance was serving
+        the whole time, so — unlike `revive` — its true state is not a
+        clean slate)."""
+        self.alive[slot] = True
+        self.version += 1
+        self.roster_version += 1
+
 
 class Instance:
     def __init__(self, iid: str, tier: Tier, model_idx: int, sim: "ClusterSim"):
@@ -125,6 +146,9 @@ class Instance:
         self.iter_scheduled = False
         self.busy_until = 0.0
         self.alive = True
+        self.epoch = 0              # bumped on fail(): one life = one epoch
+        self.quarantined = False    # watchdog-masked (tel row dark)
+        self.tel_mute = False       # blackout: stop publishing telemetry
         self.slowdown = 1.0         # >1 = straggler (hidden from telemetry)
         # telemetry snapshot (refreshed at iteration boundaries)
         self.snapshot: Dict = self._idle_snapshot(0.0)
@@ -153,7 +177,11 @@ class Instance:
     def _kick(self, t: float):
         if not self.iter_scheduled and self.alive:
             self.iter_scheduled = True
-            self.sim.push(max(t, self.busy_until), self._iterate)
+            # iterate events carry the epoch they were scheduled in: an
+            # event from a previous life (pre-fail) is a no-op when it
+            # fires, so it can never race a post-recovery chain
+            self.sim.push(max(t, self.busy_until),
+                          functools.partial(self._iterate, epoch=self.epoch))
 
     def _admit(self, t: float) -> float:
         """Admit queued requests into free slots; returns prefill seconds."""
@@ -177,7 +205,9 @@ class Instance:
                 budget_tokens=budget_tok, ctx=req.prompt.len_in))
         return dt
 
-    def _iterate(self, t: float):
+    def _iterate(self, t: float, epoch: Optional[int] = None):
+        if epoch is not None and epoch != self.epoch:
+            return                  # stale event from a previous life
         self.iter_scheduled = False
         if not self.alive:
             return
@@ -217,51 +247,85 @@ class Instance:
                          / max(len(self.running), 1)),
             "t": t + dt,
         }
-        self.sim.tel.write(self.slot, self.snapshot["pending_decode"],
-                           self.snapshot["batch_size"],
-                           self.snapshot["free_slots"],
-                           self.snapshot["mean_ctx"],
-                           self.snapshot["queue_depth"], t + dt)
+        if not self.tel_mute:
+            # telemetry blackout: the worker keeps its own snapshot
+            # fresh but the scheduler-side mirror goes dark — the
+            # staleness the telemetry watchdog exists to catch
+            self.sim.tel.write(self.slot, self.snapshot["pending_decode"],
+                               self.snapshot["batch_size"],
+                               self.snapshot["free_slots"],
+                               self.snapshot["mean_ctx"],
+                               self.snapshot["queue_depth"], t + dt)
         if self.running or self.queue:
-            self.sim.push(t + dt, self._iterate)
+            self.sim.push(t + dt,
+                          functools.partial(self._iterate, epoch=self.epoch))
             self.iter_scheduled = True
 
     def fail(self):
-        """Node failure: mark dead; running + queued requests fail.
+        """Node failure: mark dead; running + queued requests either
+        re-enter the scheduler's admission path (when the sim carries a
+        `RecoveryManager`, `sim.recovery` — see
+        `repro.serving.recovery`) or fail terminally.
 
-        Failed requests get the failure instant stamped as their
-        finish_time — they really do leave the system at that moment,
-        and metrics' wall-clock span and per-tenant denominators would
-        otherwise skew on failure-heavy cells."""
+        Terminally failed requests get the failure instant stamped as
+        their finish_time — they really do leave the system at that
+        moment, and metrics' wall-clock span and per-tenant denominators
+        would otherwise skew on failure-heavy cells."""
         self.alive = False
+        # new epoch: any _iterate event still in the heap belongs to the
+        # old life and no-ops when it fires, so the flag can be reset
+        # here and recover() can start a fresh chain immediately
+        self.epoch += 1
+        self.iter_scheduled = False
+        self.quarantined = False
         self.sim.tel.kill(self.slot)
-        for s in self.running:
-            s.req.failed = True
-            if s.req.finish_time is None:
-                s.req.finish_time = self.sim.now
-            self.sim.completed.append(s.req)
-        for req, _ in self.queue:
+        victims = ([(s.req, s.generated) for s in self.running]
+                   + [(req, 0) for req, _ in self.queue])
+        self.running = []
+        self.queue.clear()
+        mgr = getattr(self.sim, "recovery", None)
+        for req, lost in victims:
+            if mgr is not None and mgr.on_failure(req, self, lost,
+                                                  self.sim.now):
+                continue            # requeued for retry — not terminal
             req.failed = True
             if req.finish_time is None:
                 req.finish_time = self.sim.now
             self.sim.completed.append(req)
-        self.running = []
-        self.queue.clear()
+
+    def cancel(self, req: Request) -> Optional[int]:
+        """Withdraw a request without completing it (the hedge loser's
+        path): remove it from the queue or the running batch. Returns
+        the tokens it had already generated here — duplicate work the
+        hedge spent — or None when the request is not on this instance
+        (it already finished or was never dispatched here)."""
+        for j, (r, _) in enumerate(self.queue):
+            if r is req:
+                del self.queue[j]
+                return 0
+        for s in self.running:
+            if s.req is req:
+                self.running.remove(s)
+                return s.generated
+        return None
 
     def recover(self, t: float):
         """Node recovery: re-enter the roster with a genuinely clean
         slate — empty engine, healthy speed (a recovered node is a
-        replacement, not the same degraded hardware). Failed work is not
-        replayed; the paper's fleet treats failed requests as lost."""
+        replacement, not the same degraded hardware). With no
+        `sim.recovery` armed, failed work is not replayed — the paper's
+        fleet treats failed requests as lost."""
         if self.alive:
             return
         self.alive = True
         self.busy_until = t
-        # iter_scheduled is deliberately NOT reset: a pre-failure
-        # _iterate event may still be pending in the heap, and forcing
-        # the flag would let a new submit start a second concurrent
-        # iteration chain (2x decode speed). The stale event clears the
-        # flag itself when it fires.
+        # fail() reset iter_scheduled and bumped the epoch, so a
+        # pre-failure _iterate still pending in the heap is inert — a
+        # new submit can safely start a fresh single iteration chain
+        # (pinned by tests/test_recovery.py::test_stale_iterate_epoch)
+        self.iter_scheduled = False
+        self.quarantined = False
+        self.tel_mute = False
         self.slowdown = 1.0
         self.snapshot = self._idle_snapshot(t)
         self.sim.tel.revive(self.slot, t)
@@ -315,3 +379,17 @@ class ClusterSim:
 
     def alive_instances(self) -> List[Instance]:
         return [i for i in self.instances if i.alive]
+
+    def has_noncontrol_events(self) -> bool:
+        """True while the heap holds anything besides controller
+        self-loops (overload detector, telemetry watchdog). Periodic
+        controllers re-arm on THIS predicate instead of bare
+        `sim._events`, so two controllers can never keep each other —
+        and the run — alive forever."""
+        for _, _, fn in self._events:
+            owner = getattr(fn, "__self__", None)
+            if owner is not None and getattr(owner, "_is_controller",
+                                             False):
+                continue
+            return True
+        return False

@@ -14,11 +14,38 @@ def _pct(x, p):
     return float(np.percentile(x, p)) if len(x) else float("nan")
 
 
+def check_terminal_states(reqs: List[Request]):
+    """Terminal-state invariant: every request that entered the system
+    ends in EXACTLY one of {served, failed, shed}. The fault-tolerant
+    lifecycle (retry/requeue, hedged re-dispatch, controller
+    crash/restore) makes this worth asserting at aggregation time —
+    a request silently dropped by a failure path, or double-terminated
+    by a retry racing a hedge, corrupts every rate metric downstream.
+    """
+    for r in reqs:
+        assert not (r.failed and r.shed), \
+            f"rid={r.rid}: both failed and shed"
+        if r.shed:
+            assert r.finish_time is None, \
+                f"rid={r.rid}: shed but has finish_time"
+        elif r.failed:
+            assert r.finish_time is not None, \
+                f"rid={r.rid}: failed without a terminal timestamp"
+        else:
+            assert r.finish_time is not None, \
+                f"rid={r.rid}: lost — neither served, failed, nor shed"
+
+
 def aggregate(reqs: List[Request], tiers: List[Tier],
               model_names: List[str], wall: Optional[float] = None,
-              slo_s: float = 30.0) -> Dict:
+              slo_s: float = 30.0, strict: bool = True) -> Dict:
     """`slo_s`: end-to-end latency SLO for the goodput metric (served
-    requests finishing within the SLO, per wall second)."""
+    requests finishing within the SLO, per wall second). `strict`
+    asserts the terminal-state invariant over the whole stream (opt out
+    only for deliberately-truncated partial traces, e.g. a checkpoint
+    taken mid-run)."""
+    if strict:
+        check_terminal_states(reqs)
     done = [r for r in reqs
             if r.finish_time is not None and not r.failed and not r.shed]
     failed = [r for r in reqs if r.failed]
@@ -66,6 +93,12 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
         "cost_per_req": float(costs.mean()) if len(done) else 0.0,
         "throughput": len(done) / wall if wall else 0.0,
         "mix": mix,
+        # fault-tolerant lifecycle accounting (repro.serving.recovery):
+        # retried/hedged requests that ultimately SERVED, plus the
+        # duplicate work burned to get them there
+        "retried": sum(1 for r in done if r.attempt > 0),
+        "hedged": sum(1 for r in done if r.hedges > 0),
+        "wasted_tokens": int(sum(r.wasted_tokens for r in reqs)),
         "exhausted_frac": float(np.mean([r.exhausted for r in done]))
         if done else 0.0,
         "mean_residual": float(resid.mean()) if len(done) else 0.0,

@@ -129,6 +129,12 @@ class ElasticController:
     which keeps the numpy/jax/fused differential soak meaningful under
     roster churn."""
 
+    # marks the detector's self-loop as controller-owned: it re-arms on
+    # `ClusterSim.has_noncontrol_events`, and a simulated controller
+    # crash (`repro.serving.recovery.simulate_controller_crash`) strips
+    # its pending events from the heap
+    _is_controller = True
+
     def __init__(self, sim: ClusterSim, cfg: OverloadConfig,
                  reserve_iids: Sequence[str] = ()):
         self.sim = sim
@@ -181,8 +187,10 @@ class ElasticController:
                 self._scale_down(t)
         # the detector only re-arms while the cell still has work in
         # flight (arrivals, decode iterations, provisioning timers) —
-        # once it is the last event standing, the run is over
-        if self.sim._events:
+        # once only controller self-loops remain, the run is over
+        # (bare `sim._events` would let this loop and the telemetry
+        # watchdog keep each other alive forever)
+        if self.sim.has_noncontrol_events():
             self.sim.push(t + cfg.check_interval, self._check)
 
     # -- autoscaler -------------------------------------------------------

@@ -191,6 +191,17 @@ class Request:
     pred_len: Optional[float] = None
     max_tokens: Optional[int] = None
 
+    # fault-tolerant lifecycle (repro.serving.recovery). `arrival` is
+    # the SCHEDULING arrival — a requeued retry re-enters admission with
+    # a fresh arrival so batch-wait accounting charges the retry, not
+    # the whole outage — while `first_arrival` keeps the true ingest
+    # time so e2e/ttft metrics charge the full client-visible latency.
+    first_arrival: Optional[float] = None
+    attempt: int = 0               # dispatch attempts beyond the first
+    hedges: int = 0                # hedged re-dispatches taken
+    wasted_tokens: int = 0         # tokens generated then thrown away
+    #                                (failed mid-decode or hedge loser)
+
     # filled at completion
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
@@ -205,17 +216,42 @@ class Request:
     sched_stats_fetch: float = 0.0
     router_queue_wait: float = 0.0
 
+    def __post_init__(self):
+        if self.first_arrival is None:
+            self.first_arrival = self.arrival
+
+    def requeue(self, t: float):
+        """Reset dispatch state for a retry re-entering admission: the
+        request looks freshly arrived to the scheduler (arrival = now,
+        clean dispatch/completion fields) while `first_arrival` keeps
+        charging the true end-to-end clock."""
+        self.attempt += 1
+        self.arrival = t
+        self.instance = None
+        self.model_idx = None
+        self.dispatch_time = None
+        self.pred_len = None
+        self.max_tokens = None
+        self.first_token_time = None
+        self.tokens_out = 0
+        self.exhausted = False
+        self.failed = False
+
     @property
     def e2e(self) -> Optional[float]:
         if self.finish_time is None:
             return None
-        return self.finish_time - self.arrival
+        start = (self.first_arrival if self.first_arrival is not None
+                 else self.arrival)
+        return self.finish_time - start
 
     @property
     def ttft(self) -> Optional[float]:
         if self.first_token_time is None:
             return None
-        return self.first_token_time - self.arrival
+        start = (self.first_arrival if self.first_arrival is not None
+                 else self.arrival)
+        return self.first_token_time - start
 
     def served_quality(self) -> float:
         """Quality of the actually-served text: the routing-decision

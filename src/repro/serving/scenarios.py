@@ -40,6 +40,7 @@ import numpy as np
 
 from .cluster import ClusterSim
 from .overload import OverloadConfig, arm_elastic, provision_reserve
+from .recovery import RecoveryConfig, arm_recovery
 from .request import Request
 from .tiers import Tier, paper_pool_tiers
 from .workload import make_arrivals, sample_budgets
@@ -175,10 +176,14 @@ def build_requests(ds: Dataset, tenants: Tuple[TenantSpec, ...], n: int,
 class FailureEvent:
     """One timed perturbation. Targets are either explicit `instances`
     iids or `frac`/`count` of the eligible set drawn at fire time
-    (alive instances for fail/straggle, dead ones for recover). A fail
-    event always leaves at least one instance alive."""
+    (alive instances for fail/straggle/mute, dead ones for recover,
+    muted ones for unmute). A fail event always leaves at least one
+    instance alive. `mute`/`unmute` drive the telemetry-blackout
+    failure mode: a muted worker keeps serving (and keeps its local
+    snapshot fresh) but stops publishing to the scheduler's mirror —
+    the staleness the recovery watchdog exists to catch."""
     t: float
-    kind: str = "fail"              # fail | recover | straggle
+    kind: str = "fail"          # fail | recover | straggle | mute | unmute
     frac: float = 0.0
     count: int = 0
     factor: float = 4.0             # straggle slowdown multiplier
@@ -190,8 +195,12 @@ def _fire_event(sim: ClusterSim, ev: FailureEvent, rng, t: float):
         targets = [sim.by_id[iid] for iid in ev.instances
                    if iid in sim.by_id]
     else:
-        pool = ([i for i in sim.instances if not i.alive]
-                if ev.kind == "recover" else sim.alive_instances())
+        if ev.kind == "recover":
+            pool = [i for i in sim.instances if not i.alive]
+        elif ev.kind == "unmute":
+            pool = [i for i in sim.instances if i.tel_mute]
+        else:
+            pool = sim.alive_instances()
         k = ev.count if ev.count else int(round(ev.frac * len(pool)))
         k = min(max(k, 0), len(pool))
         targets = list(rng.choice(pool, k, replace=False)) if k else []
@@ -204,6 +213,10 @@ def _fire_event(sim: ClusterSim, ev: FailureEvent, rng, t: float):
             inst.recover(t)
         elif ev.kind == "straggle":
             inst.set_slowdown(ev.factor)
+        elif ev.kind == "mute":
+            inst.tel_mute = True
+        elif ev.kind == "unmute":
+            inst.tel_mute = False
         else:
             raise ValueError(ev.kind)
 
@@ -261,6 +274,10 @@ class Scenario:
     tenants: Tuple[TenantSpec, ...] = (TenantSpec("all", 12.0),)
     schedule: Tuple[FailureEvent, ...] = ()
     elastic: Optional[ElasticSpec] = None   # overload control, if any
+    # fault-tolerant lifecycle (repro.serving.recovery): armed on every
+    # sim the scenario builds, so failures in `schedule` feed the
+    # retry/hedge path instead of terminally failing their victims
+    recovery: Optional["RecoveryConfig"] = None
     seed: int = 0
 
     @property
@@ -296,10 +313,12 @@ class ScenarioRun:
         self.world = world
         self.ds = ds
         self.reserve_iids = reserve_iids
-        # mutable copy of the scenario's overload control so one built
-        # world can be re-armed per experiment arm (the elastic bench
-        # sweeps scale_up_lag_s / shed on a single trained bundle)
+        # mutable copies of the scenario's control-plane configs so one
+        # built world can be re-armed per experiment arm (the elastic
+        # bench sweeps scale_up_lag_s / shed, the chaos bench sweeps
+        # lost-work vs retry vs retry+hedge, on a single trained bundle)
         self.elastic: Optional[ElasticSpec] = scenario.elastic
+        self.recovery: Optional[RecoveryConfig] = scenario.recovery
         self._bundle = None
         self._train_data = None
 
@@ -347,10 +366,15 @@ class ScenarioRun:
                               lam_scale=lam_scale, seed=seed)
 
     def arm(self, sim: ClusterSim) -> ClusterSim:
-        """Arm this run's overload control (if any) on a sim: reserves
-        go cold, the detector loop starts, `sim.overload` is set."""
+        """Arm this run's control plane (if any) on a sim: overload
+        reserves go cold and the detector loop starts (`sim.overload`);
+        the fault-tolerant lifecycle attaches (`sim.recovery`) so the
+        schedule's failures feed retry/hedge instead of terminal
+        failure."""
         if self.elastic is not None:
             arm_elastic(sim, self.elastic.overload, self.reserve_iids)
+        if self.recovery is not None:
+            arm_recovery(sim, self.recovery)
         return sim
 
     def sim(self, seed: int = 0) -> ClusterSim:

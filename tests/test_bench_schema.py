@@ -279,3 +279,67 @@ def test_bench_elastic_artifact_schema_and_frontier():
     for r in rows:
         if r["shed"] > 0 and "prio2_slo" in r:
             assert r["prio0_slo"] >= r["prio2_slo"], r["name"]
+
+
+CHAOS_CAMPAIGNS = ("crash_storm", "correlated_failure",
+                   "telemetry_blackout", "straggler_storm")
+CHAOS_ARMS = ("lost", "retry", "retry_hedge")
+
+
+def test_bench_chaos_artifact_schema_and_recovery():
+    """The chaos harness artifact: every campaign x arm cell carries
+    the lifecycle axes, fault churn added zero XLA compiles, the
+    controller crash/restore came back bitwise identical, and the
+    headline acceptance gate holds — under crash_storm the full
+    retry+hedge stack recovers >= 90% of the goodput the lost-work arm
+    gives up."""
+    doc = _load("BENCH_chaos.json")
+    _check_schema(doc, "chaos")
+    rows = {r["name"]: r for r in doc["rows"]}
+    assert "chaos/clean" in rows
+    clean = rows["chaos/clean"]
+    assert clean["failed"] == 0 and clean["retried"] == 0
+    for camp in CHAOS_CAMPAIGNS:
+        for arm in CHAOS_ARMS:
+            r = rows[f"chaos/{camp}_{arm}"]
+            for col in ("goodput", "tput", "p50_e2e", "p99_e2e",
+                        "served", "failed", "retried", "gave_up",
+                        "hedges", "duplicate_tokens", "wasted_tokens",
+                        "quarantines", "degraded_decisions", "compiles",
+                        "r_buckets"):
+                assert col in r, f"{r['name']} missing {col}"
+            assert r["p99_e2e"] >= r["p50_e2e"] >= 0
+            # kill/revive/quarantine churn rides the alive-mask: one
+            # compiled program per pow2 R bucket, never a recompile
+            assert r["compiles"] <= r["r_buckets"], r["name"]
+            if arm == "lost":
+                # recovery disarmed: nothing retried, hedged or
+                # quarantined — and the crash campaigns really lose work
+                assert r["retried"] == 0 and r["hedges"] == 0
+                assert r["quarantines"] == 0
+                if camp in ("crash_storm", "correlated_failure"):
+                    assert r["failed"] > 0, r["name"]
+            else:
+                # recovery armed: every victim is re-served to a
+                # terminal success — zero lost requests
+                assert r["failed"] == 0, r["name"]
+                if camp in ("crash_storm", "correlated_failure"):
+                    assert r["retried"] > 0, r["name"]
+        rec = rows[f"chaos/{camp}_recovery"]
+        for col in ("recovered_frac", "g_clean", "g_lost",
+                    "g_retry_hedge"):
+            assert col in rec, f"{rec['name']} missing {col}"
+    # the watchdog and the hedger actually fired on their campaigns
+    assert rows["chaos/telemetry_blackout_retry"]["quarantines"] > 0
+    assert rows["chaos/straggler_storm_retry_hedge"]["hedges"] > 0
+    # headline gate: g_rh >= g_lost + 0.9 * (g_clean - g_lost)
+    storm = rows["chaos/crash_storm_recovery"]
+    assert storm["g_retry_hedge"] >= storm["g_lost"] + 0.9 * (
+        storm["g_clean"] - storm["g_lost"]) - 1e-9, storm
+    assert storm["recovered_frac"] >= 0.9, storm
+    # the scheduler process died mid-trace and resumed from its
+    # checkpoint to the identical completion set
+    cc = rows["chaos/controller_crash_restore"]
+    assert cc["identical"] == 1
+    assert cc["dropped_events"] > 0
+    assert cc["served"] == cc["served_ref"] == cc["n"]

@@ -87,6 +87,7 @@ class _LegacyPipelineScheduler:
         cap = self.queue_capacity
         if cap is not None and len(self.queue) >= cap:
             req.failed = True
+            req.finish_time = t   # terminal-state invariant (metrics)
             self.sim.completed.append(req)
             return
         self.queue.append(req)

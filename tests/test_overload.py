@@ -184,31 +184,39 @@ def test_kill_does_not_stamp_last_write():
 
 def test_recover_keeps_pending_iterate_single_chained():
     """Revive while a pre-failure `_iterate` event is still heap-pending
-    must not start a second concurrent decode chain (recover
-    deliberately does NOT reset iter_scheduled; the stale event clears
-    it itself). Pinned by counting this instance's pending _iterate
-    events in the heap after a fail -> recover -> resubmit sequence."""
+    must not start a second concurrent decode chain. Iterate events now
+    carry the instance's lifecycle epoch (`fail` bumps it, stale events
+    no-op on entry), so a revived instance always runs exactly ONE live
+    chain — pinned by counting this instance's current-epoch _iterate
+    events in the heap after a fail -> recover -> resubmit sequence.
+    The stale-event no-op itself is pinned in
+    tests/test_recovery.py::test_stale_iterate_epoch."""
     sim = _mini_sim(n_tiers=1, n_instances=1)
     inst = sim.instances[0]
     inst.busy_until = 1.0                        # pin the next iteration
     inst.submit(_req(0), 0.0, 10.0, None)        # _iterate queued @ t=1.0
     assert inst.iter_scheduled
 
-    def pending_iterates():
-        return sum(1 for _, _, fn in sim._events
-                   if getattr(fn, "__self__", None) is inst
-                   and getattr(fn, "__func__", None)
-                   is type(inst)._iterate)
+    def live_iterates():
+        n = 0
+        for _, _, fn in sim._events:             # functools.partial events
+            f = getattr(fn, "func", None)
+            if (getattr(f, "__self__", None) is inst
+                    and getattr(f, "__func__", None)
+                    is type(inst)._iterate
+                    and fn.keywords.get("epoch") == inst.epoch):
+                n += 1
+        return n
 
-    assert pending_iterates() == 1
+    assert live_iterates() == 1
     sim.push(0.1, lambda t: inst.fail())
     sim.push(0.2, lambda t: inst.recover(t))
     sim.push(0.3, lambda t: inst.submit(_req(1), t, 10.0, None))
     sim.run(until=0.5)                           # stale event NOT yet fired
     assert inst.alive and inst.iter_scheduled
-    assert pending_iterates() == 1               # no second chain
+    assert live_iterates() == 1                  # no second live chain
     sim.run()
-    assert pending_iterates() == 0
+    assert live_iterates() == 0
     done = [r for r in sim.completed if not r.failed]
     assert [r.rid for r in done] == [1]          # resubmit served once
 

@@ -167,8 +167,12 @@ def _probe_invariants(sim, log):
         assert np.all(tel.batch <= tel.max_batch)
         assert np.all(tel.batch >= 0) and np.all(tel.pending >= 0)
         for inst in sim.instances:
-            assert bool(tel.alive[inst.slot]) == inst.alive
-            if inst.alive:
+            # the mirror masks quarantined rows (watchdog) as well as
+            # dead ones; muted rows go stale by design, so snapshot
+            # equality only holds for publishing rows
+            assert bool(tel.alive[inst.slot]) == (
+                inst.alive and not inst.quarantined)
+            if inst.alive and not inst.tel_mute and not inst.quarantined:
                 s = inst.snapshot
                 assert s["pending_decode"] == tel.pending[inst.slot]
                 assert s["batch_size"] == tel.batch[inst.slot]
@@ -256,6 +260,114 @@ def test_fused_carried_state_stays_physical(monkeypatch):
     assert np.all(d1[pad] == 0) and np.all(b1[pad] <= 1.0)
 
 
+# -- fault-lifecycle soak (retry / hedge / watchdog, PR 7) --------------------
+
+def _random_fault_schedule(seed, n_events=6, horizon=8.0):
+    """A seeded random mix of every perturbation kind the lifecycle has
+    to survive: crashes, recoveries, stragglers and telemetry
+    blackouts. Target draws happen at fire time (apply_schedule), so
+    the same tuple composes deterministically with whatever already
+    failed."""
+    from repro.serving.scenarios import FailureEvent
+    rng = np.random.default_rng((seed, 0xC405))
+    events = []
+    for _ in range(n_events):
+        kind = str(rng.choice(("fail", "recover", "straggle",
+                               "mute", "unmute")))
+        events.append(FailureEvent(
+            t=float(rng.uniform(0.5, horizon)), kind=kind,
+            frac=float(rng.uniform(0.2, 0.7)),
+            factor=float(rng.uniform(2.0, 6.0))))
+    return tuple(sorted(events, key=lambda ev: ev.t))
+
+
+def _fault_cell(run, be, reqs_seed, n, schedule, cfg):
+    """One manual cell with the recovery manager armed (run_cell is
+    bypassed so the cached ScenarioRun's own schedule/recovery fields
+    stay untouched for the other soak tests)."""
+    from repro.serving.recovery import arm_recovery
+    from repro.serving.scenarios import apply_schedule
+    reqs = run.requests(n, seed=reqs_seed)
+    rb = RouteBalance(RBConfig(decision_backend=be, charge_compute=False),
+                      run.bundle(), run.tiers)
+    sim = ClusterSim(run.tiers, run.names, seed=0)
+    arm_recovery(sim, cfg)
+    rb.expected = len(reqs)
+    rb.attach(sim)
+    for r in reqs:
+        sim.push(r.arrival, lambda t, rr=r: rb.enqueue(rr, t))
+    apply_schedule(sim, schedule, seed=reqs_seed)
+    sim.run()
+    return reqs, sim
+
+
+def _lifecycle_fingerprint(reqs):
+    return [(r.rid, r.instance, r.attempt, r.hedges, r.tokens_out,
+             r.failed, r.shed) for r in reqs]
+
+
+def _assert_exactly_once(reqs, sim, cfg):
+    from repro.serving.metrics import check_terminal_states
+    check_terminal_states(reqs)                     # no lost requests
+    done = [r for r in sim.completed]
+    assert len({id(r) for r in done}) == len(done)  # no duplicates
+    assert len({r.rid for r in done}) == len(done)
+    for r in reqs:                                  # attempt bound
+        assert r.attempt < cfg.max_attempts, (r.rid, r.attempt)
+        if r.failed:
+            assert r.attempt == cfg.max_attempts - 1, \
+                "gave up before exhausting attempts"
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_soak_exactly_once_under_random_faults(seed, monkeypatch):
+    """Property soak over seeded random fault schedules with the
+    recovery manager armed: every request reaches exactly one terminal
+    state (served, failed-after-max-attempts, or shed — never lost,
+    never duplicated), the retry bound holds, dead instances are never
+    dispatched to, and the full lifecycle trajectory — including
+    attempt counts and hedges — is identical under all three decision
+    backends."""
+    from repro.serving.recovery import RecoveryConfig
+    _guard_dead_dispatch(monkeypatch)
+    run = _run_for(seed, max_tiers=5, max_instances=20)
+    cfg = RecoveryConfig()
+    schedule = _random_fault_schedule(seed)
+    out = {}
+    for be in BACKENDS:
+        reqs, sim = _fault_cell(run, be, seed, 50, schedule, cfg)
+        _assert_exactly_once(reqs, sim, cfg)
+        served = [r for r in reqs if r.finish_time is not None
+                  and not r.failed]
+        assert served                               # progress under churn
+        out[be] = (_lifecycle_fingerprint(reqs),
+                   [r.finish_time or -1.0 for r in reqs])
+    assert out["numpy"][0] == out["jax"][0] == out["fused"][0]
+    np.testing.assert_allclose(out["fused"][1], out["numpy"][1],
+                               rtol=1e-6)
+    np.testing.assert_array_equal(out["jax"][1], out["fused"][1])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(6)))
+def test_soak_exactly_once_under_random_faults_full(seed, monkeypatch):
+    """Nightly-scale version: bigger rosters, longer schedules, tighter
+    hedge deadlines so the hedge path actually fires across the seed
+    sweep."""
+    from repro.serving.recovery import RecoveryConfig
+    _guard_dead_dispatch(monkeypatch)
+    run = _run_for(seed, max_tiers=10, max_instances=64)
+    cfg = RecoveryConfig(hedge_factor=2.5, hedge_slack_s=1.0)
+    schedule = _random_fault_schedule(seed + 100, n_events=10,
+                                      horizon=14.0)
+    out = {}
+    for be in BACKENDS:
+        reqs, sim = _fault_cell(run, be, seed, 120, schedule, cfg)
+        _assert_exactly_once(reqs, sim, cfg)
+        out[be] = _lifecycle_fingerprint(reqs)
+    assert out["numpy"] == out["jax"] == out["fused"]
+
+
 if HAVE_HYPOTHESIS:
     from repro.serving.scenarios import FailureEvent, apply_schedule
     from repro.serving.world import World, build_dataset
@@ -315,3 +427,18 @@ if HAVE_HYPOTHESIS:
         assert versions == sorted(versions)
         assert np.all(sim.tel.free >= 0)
         assert np.all(sim.tel.batch <= sim.tel.max_batch)
+
+    @settings(max_examples=10, deadline=None, derandomize=True)
+    @given(st.integers(0, 10 ** 6))
+    def test_hypothesis_exactly_once_with_recovery(seed):
+        """Hypothesis sweep of the full fault-tolerant lifecycle on a
+        tiny world: random fault schedules (incl. telemetry blackouts
+        that trip the watchdog) never lose or duplicate a request, and
+        the retry bound always holds."""
+        from repro.serving.recovery import RecoveryConfig
+        run = _run_for(seed % 3, max_tiers=4, max_instances=12)
+        cfg = RecoveryConfig()
+        schedule = _random_fault_schedule(seed, n_events=5)
+        reqs, sim = _fault_cell(run, "fused", seed % 7, 30, schedule,
+                                cfg)
+        _assert_exactly_once(reqs, sim, cfg)
