@@ -110,6 +110,66 @@ def _recovery_overhead_guard() -> bool:
     return ratio <= TOL
 
 
+def _affinity_disabled_guard() -> bool:
+    """The prefix-affinity term must be free when disabled (<5% of
+    decide time). Structurally: ``affinity_weight=0`` compiles the term
+    out of the fused program and stages NO signature data — the sig
+    args are (1, 1) dummies and the per-bucket staging sets carry no
+    ``psig`` buffer. By measurement: the disabled runner's decide time
+    must not exceed the enabled runner's (which does strictly more
+    work — sig gathers, plane upload, in-graph hit matching) by more
+    than a 5% noise floor. Absolute regressions of the disabled path
+    against history are the main BENCH_hotpath gate's job (those
+    committed baselines predate the affinity term, so they gate it)."""
+    import time
+
+    from benchmarks import common  # noqa: F401  (puts src on sys.path)
+    from repro.core import RBConfig, RouteBalance
+    from repro.serving.cluster import ClusterSim
+    from repro.serving.scenarios import (get_scenario,
+                                         randomize_prefix_state)
+
+    run = get_scenario("session_chat").build(dataset_n=200)
+    bundle = run.bundle()
+    reqs = run.requests(64, seed=0)
+    for r in reqs:
+        r.arrival = 0.0
+    rbs = {}
+    for w in (0.0, 0.35):
+        rb = RouteBalance(RBConfig(decision_backend="fused",
+                                   affinity_weight=w,
+                                   charge_compute=False),
+                          bundle, run.tiers)
+        sim = ClusterSim(run.tiers, run.names, seed=0)
+        if w:
+            randomize_prefix_state(sim, reqs[0].cols, seed=0)
+        rb.sim = sim
+        rb._decide_core(reqs[:32])          # warm-up: compile the bucket
+        rbs[w] = rb
+    fused_off = rbs[0.0]._fused
+    assert fused_off._w_aff == 0.0
+    assert all("psig" not in bufset for pair in
+               fused_off._stage.values() for bufset in pair), \
+        "disabled affinity must stage no signature data"
+    assert fused_off._dummy_psig.shape == (1, 1)
+
+    def t_of(rb):
+        best = float("inf")
+        for _ in range(7):
+            t0 = time.perf_counter()
+            rb._decide_core(reqs[:32])
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    ratio = t_of(rbs[0.0]) / t_of(rbs[0.35])
+    if ratio > 1.05:                        # re-time once to shed noise
+        ratio = min(ratio, t_of(rbs[0.0]) / t_of(rbs[0.35]))
+    verdict = "ok" if ratio <= 1.05 else "REGRESSED"
+    print(f"affinity term: disabled decide at {ratio:.2f}x the enabled "
+          f"runner's (tol 1.05x) {verdict}")
+    return ratio <= 1.05
+
+
 def main() -> int:
     _assert_engine_api()
     os.environ["REPRO_HOTPATH_SMOKE"] = "1"
@@ -155,6 +215,8 @@ def main() -> int:
         print(f"# no committed baseline for {missing} (new cells pass)")
     if not _recovery_overhead_guard():
         failures.append(("recovery_hooks_fault_free", "overhead"))
+    if not _affinity_disabled_guard():
+        failures.append(("affinity_term_disabled", "overhead"))
     if failures:
         print(f"PERF REGRESSION: {failures}")
         return 1

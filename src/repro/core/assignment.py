@@ -8,7 +8,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .scoring import score_row
+from .scoring import affinity_discount, score_row
 
 
 def lpt_order(pred_len_max: np.ndarray, enable: bool = True) -> np.ndarray:
@@ -26,7 +26,8 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
                   allowed: Optional[np.ndarray] = None,
                   latency_mode: str = "full",
                   nominal_tpot: Optional[np.ndarray] = None,
-                  rr_state: int = 0
+                  rr_state: int = 0,
+                  affinity: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, Dict]:
     """Sequential greedy over the batch in LPT order.
 
@@ -38,6 +39,12 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
 
     latency_mode: full | off_reactive | off_predictive | static_prior
     (the four isolation arms of §6.3).
+
+    affinity: optional (R, I) float32 prefix-reuse discount
+    (affinity_weight x matched-prefix fraction, `serving.affinity`):
+    the predicted latency T is scaled by (1 - affinity) BEFORE scoring,
+    tie-breaks and est_latency — a warm prefix cache shortens this
+    request's effective prefill on that instance.
     """
     R, I = q_hat_inst.shape
     choice = np.full(R, -1, np.int64)
@@ -69,6 +76,8 @@ def greedy_assign(order: np.ndarray, q_hat_inst: np.ndarray,
                 * len_inst[r]
         else:
             T = tpot_eff * (wait + len_inst[r])
+        if affinity is not None:
+            T = affinity_discount(T, affinity[r], np).astype(dt)
         if latency_mode in ("off_reactive", "off_predictive"):
             w = (weights[0], 0.0, weights[2])
             s = score_row(q_hat_inst[r], c_hat[r], T, w,

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .budget import admission_math, cost_matrix
-from .scoring import masked_score
+from .scoring import affinity_discount, masked_score
 
 LATENCY_MODES = ("full", "off_reactive", "off_predictive", "static_prior")
 
@@ -55,7 +55,7 @@ def bucket_pow2(n: int, lo: int = 8) -> int:
 
 def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
                  d, b, free, max_batch, weights, allowed,
-                 latency_mode: str, row_valid=None):
+                 latency_mode: str, row_valid=None, affinity=None):
     """Traced body shared by both entry points. Mirrors
     ``assignment.greedy_assign`` operation-for-operation.
 
@@ -63,7 +63,12 @@ def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
     still pick (their choices are dropped by the caller) but apply NO
     dead-reckoning update, so callers that carry the post-scan state
     across batches (the fused hot path) don't accumulate phantom load.
-    Defaults to all-valid, which is bitwise the original behavior."""
+    Defaults to all-valid, which is bitwise the original behavior.
+
+    ``affinity`` (R, I) optionally carries the prefix-reuse discount
+    (affinity_weight x matched-prefix fraction): T scales by
+    (1 - affinity) before scoring/tie-break, identically to the numpy
+    loop. None compiles the term out entirely."""
     wq, wl, wc = weights
     b0 = jnp.maximum(b, 1.0)            # snapshot batch (TPOT reference)
     if row_valid is None:
@@ -77,6 +82,8 @@ def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
             T = nominal_tpot * l_inst[r]
         else:
             T = tpot_eff * (wait + l_inst[r])
+        if affinity is not None:
+            T = affinity_discount(T, affinity[r], jnp)
         if latency_mode in ("off_reactive", "off_predictive"):
             s = masked_score(q_inst[r], c_hat[r], T, (wq, 0.0, wc),
                              allowed[r], jnp)
@@ -121,12 +128,13 @@ def _f(x):
 @functools.partial(jax.jit, static_argnames=("latency_mode",))
 def greedy_core(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
                 d, b, free, max_batch, weights, allowed,
-                latency_mode: str = "full"):
+                latency_mode: str = "full", affinity=None):
     """Jitted greedy pass over a precomputed order + admission mask."""
     choice, est_T, state = _greedy_scan(
         jnp.asarray(order), _f(q_inst), _f(c_hat), _f(l_inst), _f(tpot),
         _f(nominal_tpot), _f(d), _f(b), _f(free), _f(max_batch),
-        weights, jnp.asarray(allowed, bool), latency_mode)
+        weights, jnp.asarray(allowed, bool), latency_mode,
+        affinity=None if affinity is None else _f(affinity))
     return choice, est_T
 
 
@@ -136,15 +144,16 @@ def decide_batch(q_inst, l_inst, pred_len_max, tpot, nominal_tpot,
                  d, b, free, max_batch, budgets, len_in,
                  price_in, price_out, weights,
                  latency_mode: str = "full", lpt: bool = True,
-                 budget_filter: bool = True):
+                 budget_filter: bool = True, affinity=None):
     """The whole per-batch decision, traced end-to-end.
 
     q_inst/l_inst: (R, I) per-instance quality / predicted length;
     pred_len_max: (R,) max predicted length over *models* (LPT key);
     tpot/nominal_tpot/d/b/free/max_batch: (I,) instance state;
     budgets (R,) with nan = unconstrained; len_in (R,);
-    price_in/price_out (I,). Returns (choice (R,), est_T (R,),
-    c_hat (R, I), allowed (R, I)).
+    price_in/price_out (I,); affinity optionally (R, I) prefix-reuse
+    discount. Returns (choice (R,), est_T (R,), c_hat (R, I),
+    allowed (R, I)).
     """
     q_inst, l_inst = _f(q_inst), _f(l_inst)
     budgets, len_in = _f(budgets), _f(len_in)
@@ -163,7 +172,8 @@ def decide_batch(q_inst, l_inst, pred_len_max, tpot, nominal_tpot,
     choice, est_T, _ = _greedy_scan(
         order, q_inst, c_hat, l_inst, _f(tpot), _f(nominal_tpot),
         _f(d), _f(b), _f(free), _f(max_batch), weights, allowed,
-        latency_mode)
+        latency_mode,
+        affinity=None if affinity is None else _f(affinity))
     return choice, est_T, c_hat, allowed
 
 
@@ -174,7 +184,8 @@ def decide(q_inst: np.ndarray, l_inst: np.ndarray,
            budgets: np.ndarray, len_in: np.ndarray,
            price_in: np.ndarray, price_out: np.ndarray, weights,
            latency_mode: str = "full", lpt: bool = True,
-           budget_filter: bool = True
+           budget_filter: bool = True,
+           affinity: Optional[np.ndarray] = None
            ) -> Tuple[np.ndarray, np.ndarray]:
     """numpy-in / numpy-out wrapper for the scheduler hot path.
 
@@ -196,10 +207,14 @@ def decide(q_inst: np.ndarray, l_inst: np.ndarray,
             [np.asarray(budgets, float), np.full(pad, np.nan)])
         len_in = np.concatenate(
             [np.asarray(len_in, float), np.zeros(pad)])
+        if affinity is not None:
+            affinity = np.pad(np.asarray(affinity, np.float32),
+                              ((0, pad), (0, 0)))
     weights = tuple(float(w) for w in weights)
     choice, est_T, _, _ = decide_batch(
         q_inst, l_inst, pred_len_max, tpot, nominal_tpot, d, b, free,
         max_batch, budgets, len_in, price_in, price_out, weights,
-        latency_mode=latency_mode, lpt=lpt, budget_filter=budget_filter)
+        latency_mode=latency_mode, lpt=lpt, budget_filter=budget_filter,
+        affinity=affinity)
     return (np.asarray(choice[:R], np.int64),
             np.asarray(est_T[:R], np.float64))

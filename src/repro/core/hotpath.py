@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.estimators.gbm import pack_ensemble, predict_packed_gathered
 from repro.estimators.knn import topk_soft_lookup
+from repro.serving.affinity import SIG_WIDTH, SKETCH_SLOTS, hit_fraction
 
 from .budget import admission_math, cost_matrix
 from .decision_jax import _greedy_scan, bucket_pow2
@@ -123,7 +124,8 @@ class FusedHotPath:
                        for i in instances)
         key = (roster, cfg.latency_mode, bool(cfg.lpt),
                bool(cfg.budget_filter), bool(cfg.learned_tpot),
-               tuple(float(w) for w in cfg.weights))
+               tuple(float(w) for w in cfg.weights),
+               float(getattr(cfg, "affinity_weight", 0.0)))
         cache = bundle.__dict__.setdefault("_fused_cache", {})
         runner = cache.get(key)
         if runner is None:
@@ -177,6 +179,26 @@ class FusedHotPath:
         self._lpt = bool(cfg.lpt)
         self._budget_filter = bool(cfg.budget_filter)
         self._weights = tuple(float(w) for w in cfg.weights)
+        # prefix-affinity term: compiled in only when the weight is
+        # nonzero — the disabled program is the pre-affinity program
+        # verbatim (the dummy sig args below are dead inputs XLA drops),
+        # so turning the feature off cannot perturb existing parity or
+        # decide-time (perf-guarded in benchmarks/perf_guard.py)
+        self._w_aff = float(getattr(cfg, "affinity_weight", 0.0))
+        if self._w_aff > 0.0:
+            # per-call upload of the instance sig plane: (Itot, 64)
+            # int32 ≈ 32 KB at I=128 — double buffered like the other
+            # staged inputs so a host write never aliases the previous
+            # batch's in-flight transfer. Signatures ride their own
+            # `tel.prefix_version` counter (sketch writes must not look
+            # like telemetry heartbeats), so the plane is re-staged
+            # every call rather than through the delta machinery.
+            self._pstage = [
+                np.zeros((self._Itot, SKETCH_SLOTS), np.int32),
+                np.zeros((self._Itot, SKETCH_SLOTS), np.int32)]
+            self._pflip = 0
+        self._dummy_psig = np.zeros((1, 1), np.int32)
+        self._dummy_plane = np.zeros((1, 1), np.int32)
         self._use_gbm = (cfg.latency_mode != "static_prior"
                          and cfg.learned_tpot)
         if self._use_gbm:
@@ -194,7 +216,8 @@ class FusedHotPath:
         # refreshed (pre-scan) mirror comes back out, so it chains
         # batch-to-batch on device; alive is read-only (re-uploaded on
         # roster events). args: emb 0, row_valid 1, budgets 2, len_in 3,
-        # d 4, b 5, free 6, ctx 7, alive 8, delta idx/d/b/free/ctx 9-13
+        # d 4, b 5, free 6, ctx 7, alive 8, delta idx/d/b/free/ctx 9-13,
+        # psig 14, sig_plane 15 (appended so donate indices stay fixed)
         self._step = jax.jit(self._step_impl, donate_argnums=(4, 5, 6, 7))
         # the delta lane count is FIXED at one pow2 capacity (≥ the
         # mostly-dirty threshold where _sync_state reseeds instead), so
@@ -226,7 +249,7 @@ class FusedHotPath:
     # -- traced body --------------------------------------------------------
     def _step_impl(self, emb, row_valid, budgets, len_in,
                    d, b, free, ctx, alive,
-                   didx, dd, db, dfree, dctx):
+                   didx, dd, db, dfree, dctx, psig, sig_plane):
         # 0. incremental telemetry: scatter the dirty rows into the
         # donated device mirror (pad lanes carry out-of-range indices
         # and drop). The refreshed mirror is bitwise a full host
@@ -272,6 +295,19 @@ class FusedHotPath:
                                 self._price_out, jnp)
             allowed = jnp.broadcast_to(alive[None, :], c_hat.shape)
 
+        # 3b. prefix-affinity: matched-fraction hit against the mirrored
+        # per-instance sig planes, zeroed for dead/quarantined columns
+        # (alive is the same mask Eq. 2 admission uses, so a quarantined
+        # instance can neither be picked NOR attract affinity credit).
+        # Python-level branch: w_aff == 0 compiles the term out and the
+        # dummy psig/sig_plane inputs are dead.
+        if self._w_aff > 0.0:
+            hit = hit_fraction(psig, len_in, sig_plane, jnp)
+            hit = jnp.where(alive[None, :], hit, jnp.float32(0.0))
+            aff = jnp.float32(self._w_aff) * hit
+        else:
+            aff = None
+
         # 4. LPT order + dead-reckoned greedy scan (Eq. 1 per request)
         if self._lpt:
             order = jnp.argsort(-pred_len_max, stable=True)
@@ -280,7 +316,7 @@ class FusedHotPath:
         choice, est_T, (d1, b1, f1) = _greedy_scan(
             order, q_inst, c_hat, l_inst, tpot, self._nominal,
             d, b_eff, free, self._maxb, self._weights, allowed,
-            self._mode, row_valid=row_valid)
+            self._mode, row_valid=row_valid, affinity=aff)
         l_chosen = jnp.take_along_axis(l_inst, choice[:, None],
                                        axis=1)[:, 0]
         # the refreshed pre-scan mirror (d, b, free, ctx) is the carried
@@ -320,11 +356,14 @@ class FusedHotPath:
         pair = self._stage.get(Rb)
         if pair is None:
             def mk():
-                return {"emb": np.zeros((Rb, self._E), np.float32),
-                        "prow": np.zeros(Rb, np.int32),
-                        "budgets": np.full(Rb, np.nan, np.float32),
-                        "len_in": np.zeros(Rb, np.float32),
-                        "rv": np.zeros(Rb, bool)}
+                buf = {"emb": np.zeros((Rb, self._E), np.float32),
+                       "prow": np.zeros(Rb, np.int32),
+                       "budgets": np.full(Rb, np.nan, np.float32),
+                       "len_in": np.zeros(Rb, np.float32),
+                       "rv": np.zeros(Rb, bool)}
+                if self._w_aff > 0.0:
+                    buf["psig"] = np.zeros((Rb, SIG_WIDTH), np.int32)
+                return buf
             pair = self._stage[Rb] = [mk(), mk()]
             self._sflip[Rb] = 0
         self._sflip[Rb] ^= 1
@@ -427,11 +466,21 @@ class FusedHotPath:
         s["len_in"][R:] = 0.0
         s["rv"][:R] = True
         s["rv"][R:] = False
+        if self._w_aff > 0.0:
+            np.take(cols.prefix_sig, s["prow"][:R], axis=0,
+                    out=s["psig"][:R])
+            s["psig"][R:] = 0
+            self._pflip ^= 1
+            plane = self._pstage[self._pflip]
+            plane[:self._n_real] = tel.prefix_sig
+            psig = s["psig"]
+        else:
+            psig, plane = self._dummy_psig, self._dummy_plane
         t1 = time.perf_counter()
         state_args = self._sync_state(tel)
         t2 = time.perf_counter()
         out = self._step(s["emb"], s["rv"], s["budgets"], s["len_in"],
-                         *state_args)
+                         *state_args, psig, plane)
         self._state = out[3:7]               # refreshed pre-scan mirror
         self._post_state = out[7:10]         # post-scan (diagnostics)
         t3 = time.perf_counter()

@@ -60,6 +60,18 @@ class RBConfig:
     shed: bool = True                  # honor overload admission control
     #                                    when the sim carries an
     #                                    ElasticController (sim.overload)
+    affinity_weight: float = 0.0       # prefix-cache affinity term
+    #                                    (serving.affinity): predicted
+    #                                    latency scales by (1 - weight x
+    #                                    matched-prefix fraction) in
+    #                                    every backend. 0 disables —
+    #                                    the term is compiled out of the
+    #                                    fused program and skipped by
+    #                                    the staged paths. Kept OUTSIDE
+    #                                    `weights`: that tuple is the
+    #                                    Eq. 1 simplex (sums to 1);
+    #                                    affinity is a discount on the
+    #                                    latency term, not a 4th vertex.
 
 
 class EstimatorBundle:
@@ -152,6 +164,7 @@ class RouteBalancePolicy(SchedulingPolicy):
         assert cfg.knn_backend in (None, "numpy", "jax", "pallas"), \
             cfg.knn_backend
         assert cfg.latency_mode in LATENCY_MODES, cfg.latency_mode
+        assert 0.0 <= cfg.affinity_weight <= 1.0, cfg.affinity_weight
         self.bundle = None
         self._fused = None                    # lazily-built FusedHotPath
 
@@ -273,13 +286,30 @@ class RouteBalancePolicy(SchedulingPolicy):
             len_in = np.array([r.prompt.len_in for r in reqs], float)
         nominal = np.array([self.bundle.heads[ti.name].nominal_tpot
                             for ti in tiers_of_i])
+        # prefix-cache affinity (serving.affinity): both staged arms
+        # compute the SAME host-side float32 discount matrix — the
+        # fused backend evaluates the identical integer-compare +
+        # float32 math in-graph, so all three backends score reuse
+        # bit-identically
+        aff = None
+        if cfg.affinity_weight > 0.0:
+            from repro.serving.affinity import (hit_fraction,
+                                                prompt_signatures)
+            if cols is not None:
+                req_sig = cols.prefix_sig[cols.prompt_row[rows]]
+            else:
+                req_sig = np.stack([prompt_signatures(r.prompt)
+                                    for r in reqs])
+            hit = hit_fraction(req_sig, len_in.astype(np.float32),
+                               tel.prefix_sig[alive_rows], np)
+            aff = np.float32(cfg.affinity_weight) * hit
         if cfg.decision_backend == "jax":
             from . import decision_jax
             choice, _ = decision_jax.decide(
                 q_inst, l_inst, L.max(axis=1), tpot, nominal, d, b, free,
                 maxb, budgets, len_in, price_in, price_out, cfg.weights,
                 latency_mode=cfg.latency_mode, lpt=cfg.lpt,
-                budget_filter=cfg.budget_filter)
+                budget_filter=cfg.budget_filter, affinity=aff)
         else:
             # the reference loop evaluates the decision arithmetic in
             # float32 — the jitted cores' precision — so the quantized
@@ -300,7 +330,7 @@ class RouteBalancePolicy(SchedulingPolicy):
                 tpot.astype(f32), d.astype(f32), b.astype(f32),
                 free.astype(f32), maxb.astype(f32),
                 cfg.weights, allowed, latency_mode=cfg.latency_mode,
-                nominal_tpot=nominal.astype(f32))
+                nominal_tpot=nominal.astype(f32), affinity=aff)
         l_chosen = l_inst[np.arange(R), choice]
         return instances, choice, l_chosen
 

@@ -74,19 +74,39 @@ def masked_score(q, c, t, weights, mask, xp=np):
     return xp.where(mask, quantize_scores(s, xp), neg)
 
 
+def affinity_discount(t, affinity, xp=np):
+    """The prefix-affinity term (ROADMAP item 2): discount the
+    predicted latency by the matched-prefix reuse score before Eq. 1
+    normalizes it. `affinity` is `affinity_weight * hit_fraction`
+    broadcastable to `t`'s shape (float32 in every backend); the
+    multiplicative form keeps `affinity == 0` EXACTLY the legacy
+    arithmetic (t * 1.0 is an IEEE identity), which is what lets the
+    disabled path stay bitwise-identical across all three decision
+    backends. Every backend must apply this before scoring AND use the
+    discounted value for its est-latency/tie-break bookkeeping."""
+    return t * (xp.float32(1.0) - affinity)
+
+
 def score_matrix(q_hat: np.ndarray, c_hat: np.ndarray, t_hat: np.ndarray,
-                 weights, allowed: Optional[np.ndarray] = None
-                 ) -> np.ndarray:
+                 weights, allowed: Optional[np.ndarray] = None,
+                 affinity: Optional[np.ndarray] = None) -> np.ndarray:
     """q_hat: (R, I) quality of instance's model per request in [0,1];
-    c_hat, t_hat: (R, I) positive; weights = (w_qual, w_lat, w_cost).
-    Returns (R, I) scores with disallowed pairs at -inf."""
+    c_hat, t_hat: (R, I) positive; weights = (w_qual, w_lat, w_cost);
+    affinity: optional (R, I) prefix-reuse discount (weight x matched
+    fraction) applied to t_hat. Returns (R, I) scores with disallowed
+    pairs at -inf."""
     mask = np.ones(c_hat.shape, bool) if allowed is None else allowed
+    if affinity is not None:
+        t_hat = affinity_discount(t_hat, affinity, np)
     return masked_score(q_hat, c_hat, t_hat, weights, mask, np)
 
 
 def score_row(q: np.ndarray, c: np.ndarray, t: np.ndarray, weights,
-              allowed: Optional[np.ndarray] = None) -> np.ndarray:
+              allowed: Optional[np.ndarray] = None,
+              affinity: Optional[np.ndarray] = None) -> np.ndarray:
     """Single-request variant used inside the greedy loop (t is
     state-dependent so it is recomputed per dispatch)."""
     mask = np.ones(c.shape, bool) if allowed is None else allowed
+    if affinity is not None:
+        t = affinity_discount(t, affinity, np)
     return masked_score(q, c, t, weights, mask, np)

@@ -22,6 +22,7 @@ from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from .affinity import SKETCH_SLOTS, PrefixSketch, prompt_signatures
 from .request import Request
 from .tiers import Tier
 
@@ -76,6 +77,18 @@ class TelemetryArrays:
         self.version = 0
         self.roster_version = 0
         self.last_write = np.zeros(I, np.int64)     # version stamp per row
+        # prefix-cache affinity planes (serving.affinity): per-instance
+        # sketch mirrors the decision backends score reuse against, and
+        # a cumulative matched-token diagnostic. Dead-reckoned on the
+        # SCHEDULER side (Instance.submit), not at iteration
+        # boundaries, so they ride their own version counter: bumping
+        # `version`/`last_write` here would make the fused mirror
+        # re-pull d/b/free/ctx rows the worker never reported, and a
+        # sketch write must never look like a telemetry heartbeat to
+        # the staleness watchdog.
+        self.prefix_sig = np.zeros((I, SKETCH_SLOTS), np.int32)
+        self.prefix_hit = np.zeros(I)       # cumulative matched tokens
+        self.prefix_version = 0
 
     def write(self, slot: int, pending: float, batch: int, free: int,
               ctx: float, queue: int, t: float):
@@ -87,6 +100,22 @@ class TelemetryArrays:
         self.t[slot] = t
         self.version += 1
         self.last_write[slot] = self.version
+
+    def write_prefix(self, slot: int, sketch: PrefixSketch,
+                     hit_tokens: float = 0.0):
+        """Mirror an instance's prefix sketch into its `prefix_sig` row
+        (dead-reckoned at dispatch) and accrue the matched tokens the
+        dispatch was credited with. Deliberately does NOT touch
+        `version`/`last_write` — see the class docstring."""
+        sketch.mirror(out=self.prefix_sig[slot])
+        self.prefix_hit[slot] += hit_tokens
+        self.prefix_version += 1
+
+    def clear_prefix(self, slot: int):
+        """Drop a row's prefix credit (instance failure: the cache died
+        with the node, and a revived instance comes back cold)."""
+        self.prefix_sig[slot, :] = 0
+        self.prefix_version += 1
 
     def dirty_rows(self, since: int) -> np.ndarray:
         """Rows written after version `since` (ascending slot order)."""
@@ -150,6 +179,9 @@ class Instance:
         self.quarantined = False    # watchdog-masked (tel row dark)
         self.tel_mute = False       # blackout: stop publishing telemetry
         self.slowdown = 1.0         # >1 = straggler (hidden from telemetry)
+        # dead-reckoned model of this instance's prefix cache
+        # (serving.affinity): credited at submit, cleared on fail
+        self.sketch = PrefixSketch()
         # telemetry snapshot (refreshed at iteration boundaries)
         self.snapshot: Dict = self._idle_snapshot(0.0)
         self.total_tokens = 0
@@ -167,6 +199,17 @@ class Instance:
         req.dispatch_time = t
         req.pred_len = pred_len
         req.max_tokens = max_tokens
+        # prefix-cache dead reckoning, here because submit is the ONE
+        # dispatch funnel (windowed engine, station drain, AND the
+        # hedge's direct re-submit): stamp the achieved hit against the
+        # sketch as it stands, then credit the sketch and refresh the
+        # scheduler-side mirror. A requeued retry re-hashes against the
+        # CURRENT target — never the cache its failed victim lost.
+        sigs = prompt_signatures(req.prompt)
+        hit_tok = self.sketch.hit_tokens(sigs, req.prompt.len_in)
+        req.prefix_hit = hit_tok / max(float(req.prompt.len_in), 1.0)
+        self.sketch.insert(sigs)
+        self.sim.tel.write_prefix(self.slot, self.sketch, hit_tok)
         self.queue.append((req, pred_len))
         self._kick(t)
 
@@ -198,7 +241,12 @@ class Instance:
                 in_cost = req.prompt.len_in * self.tier.price_in / 1e6
                 rem = max(req.budget - in_cost, 0.0)
                 budget_tok = int(rem / (self.tier.price_out / 1e6 + 1e-30))
-            dt += self.tier.prefill_time(req.prompt.len_in) * self.slowdown
+            # matched-prefix KV reuse skips the cached share of prefill
+            # — the physical effect the affinity term routes toward
+            # (the cache exists whether or not the scheduler scores it,
+            # so incidental hits discount the affinity-off arms too)
+            dt += (self.tier.prefill_time(req.prompt.len_in)
+                   * self.slowdown * (1.0 - req.prefix_hit))
             req.first_token_time = t + dt
             self.running.append(_Seq(
                 req=req, target_tokens=true_len, max_tokens=max_tok,
@@ -278,6 +326,12 @@ class Instance:
         self.epoch += 1
         self.iter_scheduled = False
         self.quarantined = False
+        # the KV cache dies with the node: drop the sketch AND its
+        # scheduler-side mirror, so retries/hedges of the victims are
+        # never scored against credit this instance no longer holds,
+        # and a later recover() re-enters cold
+        self.sketch.clear()
+        self.sim.tel.clear_prefix(self.slot)
         self.sim.tel.kill(self.slot)
         victims = ([(s.req, s.generated) for s in self.running]
                    + [(req, 0) for req, _ in self.queue])

@@ -90,6 +90,10 @@ def aggregate(reqs: List[Request], tiers: List[Tier],
                     if wall and len(done) else 0.0),
         "mean_ttft": float(ttft.mean()) if len(ttft) else float("nan"),
         "p99_ttft": _pct(ttft, 99),
+        # mean matched-prefix fraction at final dispatch (the KV-cache
+        # reuse the affinity term routes for; serving.affinity)
+        "cache_hit_rate": float(np.mean([r.prefix_hit for r in done]))
+        if done else 0.0,
         "cost_per_req": float(costs.mean()) if len(done) else 0.0,
         "throughput": len(done) / wall if wall else 0.0,
         "mix": mix,

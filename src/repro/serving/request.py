@@ -48,10 +48,25 @@ class RequestColumns:
         self.len_in = len_in
         self.budget = budget
         self.emb: Optional[np.ndarray] = None       # (P, E) float32
+        self._prefix_sig: Optional[np.ndarray] = None  # (P, SIG_WIDTH)
+        self._toks_padded: Optional[np.ndarray] = None  # pow2-width cache
+        self._emb_partial = None    # [out, rows_done] resume bookkeeping
 
     @property
     def n(self) -> int:
         return len(self.prompt_row)
+
+    @property
+    def prefix_sig(self) -> np.ndarray:
+        """(P, SIG_WIDTH) int32 rolling-hash prefix signatures per
+        unique prompt (lazy, memoized like `emb`). Same masked hash as
+        `affinity.prompt_signatures`, so the scoring path (columnar
+        gathers) and the dispatch path (per-prompt) agree exactly."""
+        if self._prefix_sig is None:
+            from .affinity import prefix_signatures
+            self._prefix_sig = prefix_signatures(self.tokens,
+                                                 self.tok_len)
+        return self._prefix_sig
 
     @staticmethod
     def from_requests(reqs: Sequence["Request"], stamp: bool = True
@@ -117,17 +132,32 @@ class RequestColumns:
         # pow2-pad the token WIDTH as well as the batch: encode slices
         # width at its own max_len before tracing, so streams whose
         # longest prompts differ still land on O(log max_len) compiled
-        # encoder shapes instead of one per distinct stream width
-        toks_all = self.tokens
-        Wb = bucket_pow2(toks_all.shape[1])
-        if Wb != toks_all.shape[1]:
-            toks_all = np.concatenate(
-                [toks_all,
-                 np.zeros((P, Wb - toks_all.shape[1]), toks_all.dtype)],
-                axis=1)
-        out = np.empty((P, encoder.dim), np.float32)
+        # encoder shapes instead of one per distinct stream width.
+        # The padded matrix is built ONCE and cached — re-entry (a
+        # resume after a mid-chunk encoder failure) must not
+        # concatenate a fresh zero block per call.
+        toks_all = self._toks_padded
+        if toks_all is None:
+            toks_all = self.tokens
+            Wb = bucket_pow2(toks_all.shape[1])
+            if Wb != toks_all.shape[1]:
+                toks_all = np.concatenate(
+                    [toks_all,
+                     np.zeros((P, Wb - toks_all.shape[1]),
+                              toks_all.dtype)], axis=1)
+            self._toks_padded = toks_all
+        # all-or-nothing: `self.emb` is assigned only after EVERY chunk
+        # encoded, so a mid-chunk raise can never expose garbage rows.
+        # Partial progress is kept in `_emb_partial` — a retry resumes
+        # from the first unencoded row instead of recomputing (or
+        # worse, serving) the rows a failed pass left behind.
+        if (self._emb_partial is None
+                or self._emb_partial[0].shape[1] != encoder.dim):
+            self._emb_partial = [np.empty((P, encoder.dim), np.float32),
+                                 0]
+        out, done = self._emb_partial
         chunk = 256
-        for i in range(0, P, chunk):
+        for i in range(done, P, chunk):
             toks = toks_all[i:i + chunk]
             lens = cap_len[i:i + chunk]
             n = len(toks)
@@ -137,7 +167,9 @@ class RequestColumns:
                     [toks, np.zeros((pad,) + toks.shape[1:], toks.dtype)])
                 lens = np.concatenate([lens, np.zeros(pad, lens.dtype)])
             out[i:i + n] = encoder.encode(toks, lens)[:n]
+            self._emb_partial[1] = i + n
         self.emb = out
+        self._emb_partial = None
         return self
 
 
@@ -151,7 +183,11 @@ def batch_columns(reqs: Sequence["Request"]):
     if c0 is None:
         return None, None
     for r in reqs:
-        if r.cols is not c0 or r.row < 0:
+        # the upper bound matters as much as the identity check: a
+        # request stamped by a DIFFERENT (larger) stream that was
+        # re-pointed at these columns would otherwise gather another
+        # request's tokens/embedding row — or read out of bounds
+        if r.cols is not c0 or not (0 <= r.row < c0.n):
             return None, None
     return c0, np.fromiter((r.row for r in reqs), np.int64,
                            count=len(reqs))
@@ -190,6 +226,10 @@ class Request:
     dispatch_time: Optional[float] = None
     pred_len: Optional[float] = None
     max_tokens: Optional[int] = None
+    # matched-prefix fraction against the target instance's sketch at
+    # submit time (serving.affinity): drives the prefill discount in
+    # `Instance._admit` and the cache_hit_rate metric
+    prefix_hit: float = 0.0
 
     # fault-tolerant lifecycle (repro.serving.recovery). `arrival` is
     # the SCHEDULING arrival — a requeued retry re-enters admission with
@@ -232,6 +272,7 @@ class Request:
         self.dispatch_time = None
         self.pred_len = None
         self.max_tokens = None
+        self.prefix_hit = 0.0
         self.first_token_time = None
         self.tokens_out = 0
         self.exhausted = False

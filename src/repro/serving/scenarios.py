@@ -106,6 +106,19 @@ def synthetic_pool(n_tiers: int, n_instances: int, seed: int = 0
 # -- workload composition -----------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class SessionSpec:
+    """Multi-turn session structure for a tenant (the prefix-affinity
+    workload): the tenant's requests are grouped into conversations that
+    share a growing prompt prefix — turn u's prompt is turn u-1's prompt
+    plus `extend` fresh tokens, so a router that lands follow-up turns
+    on the instance holding the conversation's KV prefix skips most of
+    the prefill (`serving.affinity`)."""
+    turns: int = 4                    # turns per conversation
+    base_len: int = 48                # first-turn prompt cap (tokens)
+    extend: Tuple[int, int] = (12, 28)   # fresh tokens per follow-up
+
+
+@dataclasses.dataclass(frozen=True)
 class TenantSpec:
     """One tenant class in a composite trace: its own arrival process,
     prompt-population slice, and budget mix."""
@@ -118,6 +131,7 @@ class TenantSpec:
     budget_frac: float = 0.0                     # P(request has a budget)
     budget_range: Tuple[float, float] = (2e-5, 4e-4)   # log-uniform USD
     priority: int = 0        # SLO class for admission shedding (0=premium)
+    session: Optional[SessionSpec] = None   # multi-turn prefix sessions
 
 
 def _tenant_prompt_pool(prompts, tenant: TenantSpec) -> np.ndarray:
@@ -132,6 +146,43 @@ def _tenant_prompt_pool(prompts, tenant: TenantSpec) -> np.ndarray:
         sub = idx[(lens >= lo) & (lens <= hi)]
         idx = sub if len(sub) else idx
     return idx if len(idx) else np.arange(len(prompts))
+
+
+def _session_prompts(prompts, pool: np.ndarray, sess: SessionSpec,
+                     n_t: int, rng) -> Tuple[list, list]:
+    """Materialize `n_t` session-turn prompts: conversations are
+    interleaved round-robin over the tenant's (time-ordered) arrival
+    slots, so turn u of a conversation always arrives after turn u-1.
+    Each turn's prompt is a FRESH `Prompt` object — turn u's tokens are
+    turn u-1's plus `extend` new ones (capped at the world's 128-token
+    embedding window), so consecutive turns share a growing prefix and
+    the rolling-hash signatures (`affinity.prefix_signatures`) of a
+    follow-up begin with its predecessor's. Returns (prompt per slot,
+    base dataset index per slot — follow-ups reuse the base row's Q/L
+    supervision)."""
+    from .world import VOCAB
+
+    n_sess = max(1, -(-n_t // max(sess.turns, 1)))   # ceil
+    base_js = rng.choice(pool, n_sess, replace=True)
+    convo: list = [None] * n_sess                    # running token state
+    out_prompts, out_js = [], []
+    for i in range(n_t):
+        s = i % n_sess
+        j = int(base_js[s])
+        base = prompts[j]
+        if convo[s] is None:
+            toks = np.asarray(base.tokens[:sess.base_len], np.int32).copy()
+        else:
+            ext = int(rng.integers(sess.extend[0], sess.extend[1] + 1))
+            toks = np.concatenate(
+                [convo[s],
+                 rng.integers(1, VOCAB, ext).astype(np.int32)])[:128]
+        convo[s] = toks
+        p = dataclasses.replace(base, tokens=toks,
+                                len_in=int(toks.size))
+        out_prompts.append(p)
+        out_js.append(j)
+    return out_prompts, out_js
 
 
 def build_requests(ds: Dataset, tenants: Tuple[TenantSpec, ...], n: int,
@@ -152,6 +203,26 @@ def build_requests(ds: Dataset, tenants: Tuple[TenantSpec, ...], n: int,
                             seed=int(rng.integers(2 ** 31)),
                             **dict(ten.arrival_kw))
         pool = _tenant_prompt_pool(prompts, ten)
+        if ten.session is not None:
+            # note the draw order (prompts, then budgets) mirrors the
+            # one-shot arm below — session-free tenants must keep
+            # byte-identical streams to before the affinity workloads
+            # existed, so the branch never perturbs rng consumption
+            # for anyone else
+            sess_prompts, sess_js = _session_prompts(
+                prompts, pool, ten.session, n_t, rng)
+            lo, hi = ten.budget_range
+            budgets = sample_budgets(n_t, ten.budget_frac, lo, hi,
+                                     rng=rng)
+            for i in range(n_t):
+                j = sess_js[i]
+                reqs.append(Request(
+                    rid=0, prompt=sess_prompts[i], arrival=float(arr[i]),
+                    true_quality=Q[j], true_length=L[j],
+                    budget=None if np.isnan(budgets[i])
+                    else float(budgets[i]),
+                    tenant=ten.name, priority=ten.priority))
+            continue
         picks = rng.choice(pool, n_t, replace=True)
         lo, hi = ten.budget_range
         budgets = sample_budgets(n_t, ten.budget_frac, lo, hi, rng=rng)
@@ -247,6 +318,29 @@ def randomize_telemetry(sim: ClusterSim, seed: int,
         k = min(int(round(kill_frac * I)), I - 1)
         for inst in rng.choice(sim.instances, k, replace=False):
             inst.fail()
+    return sim
+
+
+def randomize_prefix_state(sim: ClusterSim, cols, seed: int,
+                           frac: float = 0.6) -> ClusterSim:
+    """Warm a random subset of instance prefix sketches with random
+    prompt prefixes from a request stream's columns — the shared
+    fixture for affinity-enabled decision-parity checks. State is
+    installed through the live dead-reckoning path (`sketch.insert` +
+    `tel.write_prefix`), so the host sketches and the mirrored
+    `TelemetryArrays.prefix_sig` planes end up exactly as a real run
+    would leave them (dead instances stay cold: `Instance.fail`
+    clears both)."""
+    rng = np.random.default_rng((seed, 0xAFF1))
+    sig = cols.prefix_sig
+    for inst in sim.instances:
+        if not inst.alive or rng.uniform() > frac:
+            continue
+        for _ in range(int(rng.integers(1, 4))):
+            p = int(rng.integers(0, sig.shape[0]))
+            depth = int(rng.integers(1, sig.shape[1] + 1))
+            inst.sketch.insert(sig[p, :depth])
+        sim.tel.write_prefix(inst.slot, inst.sketch)
     return sim
 
 
@@ -470,6 +564,18 @@ SCENARIOS: Dict[str, Scenario] = {
                   FailureEvent(t=8.0, kind="straggle", frac=0.2,
                                factor=3.0),
                   FailureEvent(t=12.0, kind="recover", frac=1.0))),
+    # Multi-turn conversations sharing growing prompt prefixes — the
+    # workload the prefix-affinity term (RBConfig.affinity_weight,
+    # serving.affinity) is for. `benchmarks/affinity.py` runs this
+    # world affinity-on vs affinity-off across all three backends.
+    "session_chat": Scenario(
+        name="session_chat",
+        tenants=(
+            TenantSpec("chat", 10.0, arrival="gamma",
+                       arrival_kw=(("cv", 2.0),),
+                       session=SessionSpec(turns=5)),
+            TenantSpec("oneshot", 4.0),
+        )),
     "multitenant": Scenario(
         name="multitenant", pool="synthetic", n_tiers=6, n_instances=24,
         seed=2,

@@ -281,6 +281,43 @@ def test_bench_elastic_artifact_schema_and_frontier():
             assert r["prio0_slo"] >= r["prio2_slo"], r["name"]
 
 
+AFFINITY_BACKENDS = ("numpy", "jax", "fused")
+
+
+def test_bench_affinity_artifact_schema_and_headline():
+    """The prefix-affinity artifact: every backend x {on, off} cell is
+    present with the cache/latency axes, the fused compile pin held
+    through session churn, and the headline acceptance gate holds per
+    backend — the affinity-on arm achieves a cache hit rate strictly
+    above the off arm's incidental hits (and > 0) at mean TTFT no worse
+    than affinity-off, at equal load. All three backends agree on what
+    affinity buys (the term is part of the exact-parity decision)."""
+    doc = _load("BENCH_affinity.json")
+    _check_schema(doc, "affinity")
+    rows = {r["name"]: r for r in doc["rows"]}
+    for be in AFFINITY_BACKENDS:
+        for arm in ("on", "off"):
+            r = rows[f"affinity/{be}_{arm}"]
+            for col in ("cache_hit_rate", "mean_ttft", "p99_ttft",
+                        "goodput", "mean_e2e", "served", "compiles",
+                        "r_buckets"):
+                assert col in r, f"{r['name']} missing {col}"
+            assert 0 <= r["cache_hit_rate"] <= 1
+            assert r["p99_ttft"] >= 0 and r["mean_ttft"] >= 0
+            # session/retry churn never reaches XLA: one program per
+            # pow2 R bucket, with or without the affinity term
+            assert r["compiles"] <= r["r_buckets"], r["name"]
+        on, off = rows[f"affinity/{be}_on"], rows[f"affinity/{be}_off"]
+        assert on["cache_hit_rate"] > 0, be
+        assert on["cache_hit_rate"] > off["cache_hit_rate"], be
+        assert on["mean_ttft"] <= off["mean_ttft"] + 1e-12, be
+        assert on["served"] == off["served"], be      # equal load
+    for arm in ("on", "off"):
+        hits = [rows[f"affinity/{be}_{arm}"]["cache_hit_rate"]
+                for be in AFFINITY_BACKENDS]
+        assert max(hits) - min(hits) < 1e-9, (arm, hits)
+
+
 CHAOS_CAMPAIGNS = ("crash_storm", "correlated_failure",
                    "telemetry_blackout", "straggler_storm")
 CHAOS_ARMS = ("lost", "retry", "retry_hedge")

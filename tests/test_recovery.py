@@ -236,6 +236,88 @@ def test_full_blackout_degrades_to_least_loaded(chaos_run):
     assert m["degraded_decisions"] > 0           # mirror went dark
 
 
+# -- prefix-affinity under failure / quarantine (serving.affinity) -----------
+
+def _pick_one(run, req, w, mutate=None):
+    """The unanimous (numpy == jax == fused) instance pick for a
+    single-request decision at affinity weight `w`, on a fresh sim
+    optionally perturbed by `mutate`."""
+    picks = {}
+    for be in ("numpy", "jax", "fused"):
+        rb = RouteBalance(RBConfig(decision_backend=be,
+                                   affinity_weight=w),
+                          run.bundle(), run.tiers)
+        sim = ClusterSim(run.tiers, run.names, seed=0)
+        if mutate is not None:
+            mutate(sim)
+        rb.sim = sim
+        instances, choice, _ = rb._decide_core([req])
+        picks[be] = instances[int(choice[0])].iid
+    assert len(set(picks.values())) == 1, picks
+    return picks["fused"]
+
+
+def test_revived_instance_returns_cold(chaos_run):
+    """The KV cache dies with the node: after fail() -> recover() the
+    instance's sketch AND its scheduler-side mirror row are empty, and
+    a re-dispatch of the very prompt it was serving scores a zero hit
+    (a retry must never be credited against the cache its failed victim
+    lost)."""
+    from repro.serving.affinity import prompt_signatures
+    sim = ClusterSim(chaos_run.tiers, chaos_run.names, seed=0)
+    inst = sim.instances[0]
+    p = Prompt(pid=0, topic=0, difficulty=0.5, verbosity=0.5,
+               tokens=np.arange(1, 65, dtype=np.int32), len_in=64)
+    r1, r2 = (_req(i) for i in (0, 1))
+    r1.prompt = r2.prompt = p
+    inst.submit(r1, 0.0, 10.0, None)
+    assert len(inst.sketch) > 0
+    assert sim.tel.prefix_sig[inst.slot].any()
+    inst.fail()
+    inst.recover(1.0)
+    assert len(inst.sketch) == 0                 # revived cold
+    assert not sim.tel.prefix_sig[inst.slot].any()
+    assert inst.sketch.hit_tokens(prompt_signatures(p), 64) == 0
+    inst.submit(r2, 1.1, 10.0, None)
+    assert r2.prefix_hit == 0.0                  # the retry pays full prefill
+
+
+def test_quarantined_row_never_scores_affinity(chaos_run):
+    """The watchdog's quarantine masks a row out of the candidate
+    roster; its (still-populated) prefix mirror must contribute NOTHING:
+    decisions with a quarantined warm row are identical to decisions
+    with that row quarantined and cold, in every backend — and the warm
+    instance is never picked while masked."""
+    from repro.serving.affinity import prompt_signatures
+    run = chaos_run
+    req = run.requests(4, seed=5)[0]
+    req.arrival = 0.0
+    sig = prompt_signatures(req.prompt)
+    base = _pick_one(run, req, 0.9)
+    slot = next(i.slot for i in
+                ClusterSim(run.tiers, run.names, seed=0).instances
+                if i.iid == base)
+
+    def warm(sim):
+        inst = sim.instances[slot]
+        inst.sketch.insert(sig)
+        sim.tel.write_prefix(slot, inst.sketch)
+
+    def quarantine(sim):
+        sim.instances[slot].quarantined = True
+        sim.tel.quarantine(slot)
+
+    def warm_quar(sim):
+        warm(sim)
+        quarantine(sim)
+
+    assert _pick_one(run, req, 0.9, warm) == base    # warm: still best
+    q_warm = _pick_one(run, req, 0.9, warm_quar)
+    assert q_warm != base                            # masked row unpickable
+    # stale prefix credit on a masked row is invisible to the score
+    assert q_warm == _pick_one(run, req, 0.9, quarantine)
+
+
 def test_parity_through_recovery_churn(chaos_run):
     """numpy == jax == fused full-trajectory parity THROUGH retry,
     hedge and quarantine churn: every recovery decision is a

@@ -29,7 +29,9 @@ import pytest
 
 from repro.core import RBConfig, RouteBalance, run_cell
 from repro.serving.cluster import ClusterSim, Instance
-from repro.serving.scenarios import random_scenario, randomize_telemetry
+from repro.serving.scenarios import (random_scenario,
+                                     randomize_prefix_state,
+                                     randomize_telemetry)
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -56,15 +58,21 @@ def _loaded_sim(run, seed, kill_frac=0.0):
         ClusterSim(run.tiers, run.names, seed=0), seed, kill_frac)
 
 
-def _decision_parity(run, seed, R, kill_frac=0.0):
+def _decision_parity(run, seed, R, kill_frac=0.0, affinity_weight=0.0):
     reqs = run.requests(R, seed=seed)[:R]
     for r in reqs:
         r.arrival = 0.0
     out = {}
     for be in BACKENDS:
-        rb = RouteBalance(RBConfig(decision_backend=be),
+        rb = RouteBalance(RBConfig(decision_backend=be,
+                                   affinity_weight=affinity_weight),
                           run.bundle(), run.tiers)
-        rb.sim = _loaded_sim(run, seed, kill_frac)
+        sim = _loaded_sim(run, seed, kill_frac)
+        if affinity_weight:
+            # warm a random subset of sketches through the live
+            # dead-reckoning path (dead instances stay cold)
+            randomize_prefix_state(sim, reqs[0].cols, seed)
+        rb.sim = sim
         instances, choice, l_chosen = rb._decide_core(reqs)
         dead = {inst.iid for inst in rb.sim.instances if not inst.alive}
         picked = [instances[int(i)].iid for i in choice]
@@ -97,6 +105,29 @@ def test_soak_decision_parity_full(seed, kill_frac):
     replica flips."""
     run = _run_for(seed, max_tiers=16, max_instances=128)
     _decision_parity(run, seed, R=48, kill_frac=kill_frac)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_soak_decision_parity_affinity_small(seed):
+    """Tier-1 subset with the prefix-affinity term live: warmed random
+    sketches, exact numpy == jax == fused parity including the
+    quantized tie-break (the fourth term rides the same float32
+    arithmetic and epsilon-quantization as the other three)."""
+    run = _run_for(seed, max_tiers=6, max_instances=32)
+    _decision_parity(run, seed, R=16, affinity_weight=0.35)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(10)))
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+def test_soak_decision_parity_affinity_full(seed, kill_frac):
+    """Full affinity soak: 16x128 worlds, warmed sketches, with and
+    without a quarter of the fleet dead (killed AFTER warming in some
+    orders via randomize_prefix_state's alive check — dead rows must
+    never contribute affinity in any backend)."""
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    _decision_parity(run, seed, R=48, kill_frac=kill_frac,
+                     affinity_weight=0.35)
 
 
 @pytest.mark.slow
