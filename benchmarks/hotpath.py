@@ -1,5 +1,8 @@
 """Full hot-path latency: staged numpy vs staged jax vs the fused
-single-dispatch program.
+single-dispatch program vs the Pallas decision megakernel
+(`repro.kernels.decision_megakernel` — one kernel for KNN top-k ->
+packed GBM -> admission -> LPT greedy scan; megakernel rows carry
+`vs_fused` + `agree` so perf_guard can gate parity-or-better).
 
 One "decision" here is everything between batch formation and dispatch —
 token padding, the sentence encoder, the batched KNN lookup, the
@@ -43,7 +46,7 @@ SMOKE = os.environ.get("REPRO_HOTPATH_SMOKE", "") not in ("", "0")
 GRID = (((8, 13), (16, 13)) if SMOKE else
         ((8, 13), (16, 13), (64, 13), (256, 13), (256, 52), (256, 128),
          (512, 128)))
-BACKENDS = ("numpy", "jax", "fused")
+BACKENDS = ("numpy", "jax", "fused", "megakernel")
 
 
 def scaled_pool(tiers, I):
@@ -122,6 +125,12 @@ def main():
             extra = ""
             if be != "numpy":
                 extra = f";speedup_vs_numpy={best['numpy']/best[be]:.2f}x"
+            if be == "megakernel":
+                # the one-kernel decision vs the fused-XLA pipeline:
+                # the perf_guard parity-or-better gate's raw material
+                extra += (f";speedup_vs_jax={best['jax']/best[be]:.2f}x"
+                          f";vs_fused={best['fused']/best[be]:.2f}x"
+                          f";agree={agree:.3f}")
             if be == "fused":
                 extra += (f";speedup_vs_jax={best['jax']/best[be]:.2f}x"
                           f";margin_vs_jax_ms={paired['fused']*1e3:.2f}"

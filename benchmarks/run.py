@@ -31,7 +31,7 @@ def main() -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             mod.main()
             from benchmarks import common
-            common.flush_json(name)
+            common.flush_json(getattr(mod, "FLUSH_AS", name))
             print(f"### {name} done in {time.time()-t0:.0f}s")
         except Exception:
             failures.append(name)

@@ -53,6 +53,57 @@ def bucket_pow2(n: int, lo: int = 8) -> int:
     return max(lo, 1 << max(int(n) - 1, 0).bit_length())
 
 
+def greedy_step(r, d, b, free, *, q_inst, c_hat, l_inst, tpot,
+                nominal_tpot, b0, max_batch, weights, allowed,
+                latency_mode, row_valid, affinity):
+    """One greedy-scan step: Eq. 1 score for request ``r`` over the
+    live dead-reckoned state, the pick, and the state update. THE one
+    definition of the per-step arithmetic — `_greedy_scan`'s lax.scan
+    (staged-jax and fused-XLA backends) and the Pallas megakernel's
+    in-kernel fori_loop (`repro.kernels.decision_megakernel`) both
+    trace this body, which is what makes their dead-reckoned carries
+    bitwise identical by construction rather than by luck.
+
+    Returns (d, b, free, i (int32 pick), est (float32 latency))."""
+    wq, wl, wc = weights
+    wait = jnp.where(free > 0, 0.0, d / jnp.maximum(b, 1.0))
+    tpot_eff = tpot * jnp.maximum(b / b0, 1.0)
+    if latency_mode == "static_prior":
+        T = nominal_tpot * l_inst[r]
+    else:
+        T = tpot_eff * (wait + l_inst[r])
+    if affinity is not None:
+        T = affinity_discount(T, affinity[r], jnp)
+    if latency_mode in ("off_reactive", "off_predictive"):
+        s = masked_score(q_inst[r], c_hat[r], T, (wq, 0.0, wc),
+                         allowed[r], jnp)
+        # model score is instance-blind: tie-break within winner
+        # model. The numpy loop subtracts 1e-9 * normalized tie in
+        # float64; that term is below float32 eps for O(1) scores,
+        # so realize the same order explicitly — least tie metric
+        # among the score-tied candidates. Scores arrive
+        # epsilon-quantized from masked_score, so the tie groups
+        # are identical across float32/float64 backends.
+        tie = (d + b) if latency_mode == "off_reactive" else T
+        tn = tie / jnp.maximum(tie.max(), 1e-9)
+        i = jnp.argmin(jnp.where(s >= s.max(), tn, jnp.inf))
+    else:
+        s = masked_score(q_inst[r], c_hat[r], T, (wq, wl, wc),
+                         allowed[r], jnp)
+        i = jnp.argmax(s)
+    est = T[i]
+    # dead reckoning: the chosen instance's pending work grows by L̂
+    v = row_valid[r]
+    d = d.at[i].add(jnp.where(v, l_inst[r, i], 0.0))
+    has_free = (free[i] > 0) & v
+    dec = jnp.where(has_free, 1.0, 0.0)
+    free = free.at[i].add(-dec)
+    b = b.at[i].set(jnp.where(has_free,
+                              jnp.minimum(b[i] + 1.0, max_batch[i]),
+                              b[i]))
+    return d, b, free, i.astype(jnp.int32), est
+
+
 def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
                  d, b, free, max_batch, weights, allowed,
                  latency_mode: str, row_valid=None, affinity=None):
@@ -69,49 +120,19 @@ def _greedy_scan(order, q_inst, c_hat, l_inst, tpot, nominal_tpot,
     (affinity_weight x matched-prefix fraction): T scales by
     (1 - affinity) before scoring/tie-break, identically to the numpy
     loop. None compiles the term out entirely."""
-    wq, wl, wc = weights
     b0 = jnp.maximum(b, 1.0)            # snapshot batch (TPOT reference)
     if row_valid is None:
         row_valid = jnp.ones(q_inst.shape[0], bool)
 
     def step(state, r):
         d, b, free = state
-        wait = jnp.where(free > 0, 0.0, d / jnp.maximum(b, 1.0))
-        tpot_eff = tpot * jnp.maximum(b / b0, 1.0)
-        if latency_mode == "static_prior":
-            T = nominal_tpot * l_inst[r]
-        else:
-            T = tpot_eff * (wait + l_inst[r])
-        if affinity is not None:
-            T = affinity_discount(T, affinity[r], jnp)
-        if latency_mode in ("off_reactive", "off_predictive"):
-            s = masked_score(q_inst[r], c_hat[r], T, (wq, 0.0, wc),
-                             allowed[r], jnp)
-            # model score is instance-blind: tie-break within winner
-            # model. The numpy loop subtracts 1e-9 * normalized tie in
-            # float64; that term is below float32 eps for O(1) scores,
-            # so realize the same order explicitly — least tie metric
-            # among the score-tied candidates. Scores arrive
-            # epsilon-quantized from masked_score, so the tie groups
-            # are identical across float32/float64 backends.
-            tie = (d + b) if latency_mode == "off_reactive" else T
-            tn = tie / jnp.maximum(tie.max(), 1e-9)
-            i = jnp.argmin(jnp.where(s >= s.max(), tn, jnp.inf))
-        else:
-            s = masked_score(q_inst[r], c_hat[r], T, (wq, wl, wc),
-                             allowed[r], jnp)
-            i = jnp.argmax(s)
-        est = T[i]
-        # dead reckoning: the chosen instance's pending work grows by L̂
-        v = row_valid[r]
-        d = d.at[i].add(jnp.where(v, l_inst[r, i], 0.0))
-        has_free = (free[i] > 0) & v
-        dec = jnp.where(has_free, 1.0, 0.0)
-        free = free.at[i].add(-dec)
-        b = b.at[i].set(jnp.where(has_free,
-                                  jnp.minimum(b[i] + 1.0, max_batch[i]),
-                                  b[i]))
-        return (d, b, free), (i.astype(jnp.int32), est)
+        d, b, free, i, est = greedy_step(
+            r, d, b, free, q_inst=q_inst, c_hat=c_hat, l_inst=l_inst,
+            tpot=tpot, nominal_tpot=nominal_tpot, b0=b0,
+            max_batch=max_batch, weights=weights, allowed=allowed,
+            latency_mode=latency_mode, row_valid=row_valid,
+            affinity=affinity)
+        return (d, b, free), (i, est)
 
     init = (d, b, free)
     (d, b, free), (picks, ests) = jax.lax.scan(step, init, order)

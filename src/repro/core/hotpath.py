@@ -122,7 +122,10 @@ class FusedHotPath:
         roster = tuple((i.tier.name, i.model_idx, i.tier.max_batch,
                         i.tier.price_in, i.tier.price_out)
                        for i in instances)
-        key = (roster, cfg.latency_mode, bool(cfg.lpt),
+        backend = ("megakernel"
+                   if getattr(cfg, "decision_backend", "fused")
+                   == "megakernel" else "fused")
+        key = (roster, backend, cfg.latency_mode, bool(cfg.lpt),
                bool(cfg.budget_filter), bool(cfg.learned_tpot),
                tuple(float(w) for w in cfg.weights),
                float(getattr(cfg, "affinity_weight", 0.0)))
@@ -136,6 +139,18 @@ class FusedHotPath:
 
     def __init__(self, bundle, instances, cfg):
         self._encoder = bundle.encoder      # ingest-time embedding only
+        # "megakernel" swaps the traced stage pipeline for the single
+        # Pallas dispatch (repro.kernels.decision_megakernel); every
+        # other backend value (the default "fused" included) keeps the
+        # staged-XLA body. All host machinery — staging, delta sync,
+        # LazyDecision, pow2 bucketing — is shared, so the two traced
+        # bodies differ ONLY inside _step_impl.
+        self._backend = ("megakernel"
+                         if getattr(cfg, "decision_backend", "fused")
+                         == "megakernel" else "fused")
+        if self._backend == "megakernel":
+            from repro.kernels.ops import INTERPRET
+            self._interpret = INTERPRET
         knn = bundle.knn
         self._E = bundle.encoder.dim
         self._k = knn.k
@@ -219,6 +234,14 @@ class FusedHotPath:
         # d 4, b 5, free 6, ctx 7, alive 8, delta idx/d/b/free/ctx 9-13,
         # psig 14, sig_plane 15 (appended so donate indices stay fixed)
         self._step = jax.jit(self._step_impl, donate_argnums=(4, 5, 6, 7))
+        # multi-window megakernel dispatch: same signature with a
+        # leading K axis on the per-window args; compiled per
+        # (pow2 K, pow2 R) pair, so variants stay O(log K · log R)
+        self._step_multi = (
+            jax.jit(self._step_multi_impl, donate_argnums=(4, 5, 6, 7))
+            if self._backend == "megakernel" else None)
+        self._mstage: Dict[Tuple[int, int], list] = {}
+        self._mflip: Dict[Tuple[int, int], int] = {}
         # the delta lane count is FIXED at one pow2 capacity (≥ the
         # mostly-dirty threshold where _sync_state reseeds instead), so
         # full-reseed, carry and every delta sync share one compiled
@@ -246,7 +269,36 @@ class FusedHotPath:
         return np.concatenate(
             [x, np.full(self._Ipad, fill, x.dtype)])
 
-    # -- traced body --------------------------------------------------------
+    # -- traced bodies ------------------------------------------------------
+    def _mega_stages(self, emb, row_valid, budgets, len_in,
+                     d, b, free, ctx, alive, psig, sig_plane):
+        """Stages 1–4 as the single Pallas megakernel dispatch. The
+        per-window args carry a leading K axis (K=1 for the plain
+        step); telemetry mirror + estimator constants are shared
+        blocks. Returns (choice, est_T, l_chosen, d1, b1, f1) with the
+        K axis intact."""
+        from repro.kernels.decision_megakernel import (decision_call,
+                                                       dummy_gbm)
+        if self._use_gbm:
+            gf, gt, gl, gb = (self._gbm["feature"],
+                              self._gbm["threshold"],
+                              self._gbm["leaf"], self._gbm["base"])
+            depth, lr = self._gbm["depth"], self._gbm["lr"]
+        else:
+            gf, gt, gl, gb = dummy_gbm()
+            depth, lr = 1, 0.1
+        return decision_call(
+            emb, row_valid, budgets, len_in, psig,
+            d, b, free, ctx, alive,
+            self._x, self._xsq, self._qual, self._leng,
+            self._m_of_i, self._tier_of_i, self._maxb, self._price_in,
+            self._price_out, self._nominal, sig_plane, gf, gt, gl, gb,
+            k=self._k, eps=self._eps, weights=self._weights,
+            latency_mode=self._mode, lpt=self._lpt,
+            budget_filter=self._budget_filter, w_aff=self._w_aff,
+            use_gbm=self._use_gbm, depth=depth, lr=lr,
+            interpret=self._interpret)
+
     def _step_impl(self, emb, row_valid, budgets, len_in,
                    d, b, free, ctx, alive,
                    didx, dd, db, dfree, dctx, psig, sig_plane):
@@ -260,6 +312,18 @@ class FusedHotPath:
         b = b.at[didx].set(db, mode="drop")
         free = free.at[didx].set(dfree, mode="drop")
         ctx = ctx.at[didx].set(dctx, mode="drop")
+
+        if self._backend == "megakernel":
+            # stages 1–4 fused into one Pallas dispatch (K=1 window);
+            # the refreshed pre-scan mirror still carries forward
+            # exactly as below
+            choice, est_T, l_chosen, d1, b1, f1 = (
+                o[0] for o in self._mega_stages(
+                    emb[None], row_valid[None], budgets[None],
+                    len_in[None], d, b, free, ctx, alive,
+                    psig[None], sig_plane))
+            return (choice, est_T, l_chosen, d, b, free, ctx,
+                    d1, b1, f1)
 
         # 1. prompt-intrinsic estimation: KNN top-k over the ingest
         # embedding column, all models at once
@@ -325,6 +389,24 @@ class FusedHotPath:
         # from telemetry just like the staged backends
         return (choice, est_T, l_chosen, d, b, free, ctx, d1, b1, f1)
 
+    def _step_multi_impl(self, emb, row_valid, budgets, len_in,
+                         d, b, free, ctx, alive,
+                         didx, dd, db, dfree, dctx, psig, sig_plane):
+        """K coalesced scheduler windows, one megakernel dispatch. The
+        delta scatter runs once; every window scans from the refreshed
+        mirror — bitwise what K back-to-back `_step` calls see when
+        telemetry has not moved between them (the mirror reseeds from
+        telemetry per dispatch, never across-batch dead-reckoning), so
+        coalescing only amortizes launch/sync overhead."""
+        d = d.at[didx].set(dd, mode="drop")
+        b = b.at[didx].set(db, mode="drop")
+        free = free.at[didx].set(dfree, mode="drop")
+        ctx = ctx.at[didx].set(dctx, mode="drop")
+        choice, est_T, l_chosen, d1, b1, f1 = self._mega_stages(
+            emb, row_valid, budgets, len_in, d, b, free, ctx, alive,
+            psig, sig_plane)
+        return (choice, est_T, l_chosen, d, b, free, ctx, d1, b1, f1)
+
     # -- host side ----------------------------------------------------------
     def reset(self):
         """Forget carried device state (new sim / fresh roster) and
@@ -342,11 +424,16 @@ class FusedHotPath:
 
     def compile_count(self) -> int:
         """Number of XLA programs compiled for the fused step — one per
-        pow2 R bucket seen. Roster events (fail/recover/autoscale) flip
-        the alive mask and reseed the mirror but must NOT add entries
-        here: that is the no-recompile-on-scale contract the elastic
-        soak asserts (`compile_count() == len(distinct R buckets)`)."""
-        return int(self._step._cache_size())
+        pow2 R bucket seen (plus one per (pow2 K, pow2 R) pair for the
+        multi-window megakernel dispatch, when used). Roster events
+        (fail/recover/autoscale) flip the alive mask and reseed the
+        mirror but must NOT add entries here: that is the
+        no-recompile-on-scale contract the elastic soak asserts
+        (`compile_count() == len(distinct R buckets)`)."""
+        n = int(self._step._cache_size())
+        if self._step_multi is not None:
+            n += int(self._step_multi._cache_size())
+        return n
 
     def _stage_buffers(self, Rb: int) -> Dict[str, np.ndarray]:
         """The preallocated host staging set for the pow2 batch bucket.
@@ -488,6 +575,102 @@ class FusedHotPath:
         st["host_s"] += t2 - t0
         st["dispatch_s"] += t3 - t2
         return LazyDecision(out[0], out[2], R, st)
+
+    def _multi_buffers(self, Kb: int, Rb: int) -> Dict[str, np.ndarray]:
+        """Double-buffered host staging for the (pow2 K, pow2 R)
+        multi-window bucket, mirroring `_stage_buffers`."""
+        key = (Kb, Rb)
+        pair = self._mstage.get(key)
+        if pair is None:
+            def mk():
+                buf = {"emb": np.zeros((Kb, Rb, self._E), np.float32),
+                       "prow": np.zeros((Kb, Rb), np.int32),
+                       "budgets": np.full((Kb, Rb), np.nan, np.float32),
+                       "len_in": np.zeros((Kb, Rb), np.float32),
+                       "rv": np.zeros((Kb, Rb), bool),
+                       "dummy_psig": np.zeros((Kb, 1, 1), np.int32)}
+                if self._w_aff > 0.0:
+                    buf["psig"] = np.zeros((Kb, Rb, SIG_WIDTH), np.int32)
+                return buf
+            pair = self._mstage[key] = [mk(), mk()]
+            self._mflip[key] = 0
+        self._mflip[key] ^= 1
+        return pair[self._mflip[key]]
+
+    def decide_cols_multi(self, batches, tel) -> List[LazyDecision]:
+        """K scheduler windows sharing ONE megakernel dispatch
+        (grid=(K,)). `batches` is a list of (cols, rows) window slices;
+        returns one `LazyDecision` per window, in order.
+
+        All windows decide from the same telemetry snapshot — exactly
+        what K back-to-back `decide_cols` calls produce when telemetry
+        has not moved between them (each dispatch reseeds the mirror
+        from `tel`; dead-reckoned state never carries across batches) —
+        so coalescing is assignment-exact while paying one kernel
+        launch, one mirror sync and one staging pass for the K windows.
+        Window count and row count both bucket to powers of two (pad
+        windows are all-invalid rows), keeping compile variants at
+        O(log K · log R). Megakernel backend only."""
+        assert self._backend == "megakernel", self._backend
+        if len(batches) == 1:
+            cols, rows = batches[0]
+            return [self.decide_cols(cols, rows, tel)]
+        st = self.stats
+        K = len(batches)
+        st["calls"] += K
+        st["multi_dispatch"] = st.get("multi_dispatch", 0) + 1
+        t0 = time.perf_counter()
+        Kb = bucket_pow2(K, lo=1)
+        Rb = bucket_pow2(max(len(rows) for _, rows in batches))
+        s = self._multi_buffers(Kb, Rb)
+        for ki, (cols, rows) in enumerate(batches):
+            assert cols.emb is not None, \
+                "RequestColumns.ensure_embeddings must run before decide"
+            R = len(rows)
+            prow = s["prow"][ki, :R]
+            np.take(cols.prompt_row, rows, out=prow)
+            np.take(cols.emb, prow, axis=0, out=s["emb"][ki, :R])
+            s["emb"][ki, R:] = 0.0
+            s["budgets"][ki, :R] = cols.budget[rows]
+            s["budgets"][ki, R:] = np.nan
+            s["len_in"][ki, :R] = cols.len_in[rows]
+            s["len_in"][ki, R:] = 0.0
+            s["rv"][ki, :R] = True
+            s["rv"][ki, R:] = False
+            if self._w_aff > 0.0:
+                np.take(cols.prefix_sig, prow, axis=0,
+                        out=s["psig"][ki, :R])
+                s["psig"][ki, R:] = 0
+        for ki in range(K, Kb):               # pad windows: no-ops
+            s["emb"][ki] = 0.0
+            s["budgets"][ki] = np.nan
+            s["len_in"][ki] = 0.0
+            s["rv"][ki] = False
+            if self._w_aff > 0.0:
+                s["psig"][ki] = 0
+        if self._w_aff > 0.0:
+            self._pflip ^= 1
+            plane = self._pstage[self._pflip]
+            plane[:self._n_real] = tel.prefix_sig
+            psig = s["psig"]
+        else:
+            psig, plane = s["dummy_psig"], self._dummy_plane
+        t1 = time.perf_counter()
+        state_args = self._sync_state(tel)
+        t2 = time.perf_counter()
+        out = self._step_multi(s["emb"], s["rv"], s["budgets"],
+                               s["len_in"], *state_args, psig, plane)
+        self._state = out[3:7]               # refreshed pre-scan mirror
+        # diagnostics: the LAST real window's post-scan view (windows
+        # are independent; pad windows apply no updates)
+        self._post_state = tuple(o[K - 1] for o in out[7:10])
+        t3 = time.perf_counter()
+        st["stage_s"] += t1 - t0
+        st["host_s"] += t2 - t0
+        st["dispatch_s"] += t3 - t2
+        return [LazyDecision(out[0][ki], out[2][ki],
+                             len(batches[ki][1]), st)
+                for ki in range(K)]
 
     def decide(self, batch, tel) -> Tuple[np.ndarray, np.ndarray]:
         """Legacy AoS entry (direct callers, tests): derive the column

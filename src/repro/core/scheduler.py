@@ -51,8 +51,19 @@ class RBConfig:
     decision_backend: str = "fused"    # fused (single-dispatch hot
     #                                    path, the default since it
     #                                    soaked under tests/test_soak) |
+    #                                    megakernel (the whole decision
+    #                                    as ONE Pallas kernel —
+    #                                    repro.kernels.decision_megakernel
+    #                                    — behind the same host
+    #                                    machinery as fused) |
     #                                    jax (staged jitted core) |
     #                                    numpy (reference loop)
+    window_coalesce: int = 1           # megakernel only: up to K
+    #                                    scheduler windows share one
+    #                                    kernel dispatch (grid=(K,))
+    #                                    via assign_windows. 1 = one
+    #                                    dispatch per window (default;
+    #                                    matches every other backend)
     knn_backend: Optional[str] = None  # override bundle's KNN backend
     #                                    (numpy | jax | pallas); staged
     #                                    backends only — fused has the
@@ -159,8 +170,13 @@ class RouteBalancePolicy(SchedulingPolicy):
     def __init__(self, cfg: RBConfig):
         self.cfg = cfg
         validate(cfg.weights)
-        assert cfg.decision_backend in ("numpy", "jax", "fused"), \
+        assert cfg.decision_backend in ("numpy", "jax", "fused",
+                                        "megakernel"), \
             cfg.decision_backend
+        assert cfg.window_coalesce >= 1, cfg.window_coalesce
+        assert (cfg.window_coalesce == 1
+                or cfg.decision_backend == "megakernel"), \
+            "window_coalesce > 1 needs decision_backend='megakernel'"
         assert cfg.knn_backend in (None, "numpy", "jax", "pallas"), \
             cfg.knn_backend
         assert cfg.latency_mode in LATENCY_MODES, cfg.latency_mode
@@ -204,11 +220,34 @@ class RouteBalancePolicy(SchedulingPolicy):
         """Dispatch the per-batch decision; the fused backend's payload
         is a LazyDecision (device arrays, deferred transfer); the
         staged backends' is already numpy."""
-        if self.cfg.decision_backend == "fused":
+        if self.cfg.decision_backend in ("fused", "megakernel"):
             instances, res = self._decide_fused(batch, cluster)
             return AssignmentResult(instances, res)
         instances, choice, l_chosen = self._decide_staged(batch, cluster)
         return AssignmentResult(instances, Ready(choice, l_chosen))
+
+    def assign_windows(self, batches: List[BatchView],
+                       cluster: ClusterSim) -> List[AssignmentResult]:
+        """K scheduler windows as ONE device dispatch (megakernel only:
+        `FusedHotPath.decide_cols_multi`, grid=(K,)). All K windows
+        decide against the same telemetry snapshot — exactly what K
+        back-to-back `assign` calls see when telemetry has not moved
+        between them, so coalescing is assignment-exact there while
+        paying one kernel launch for K windows. Falls back to per-window
+        `assign` for every other backend (and for K == 1)."""
+        if (self.cfg.decision_backend != "megakernel"
+                or len(batches) <= 1):
+            return [self.assign(bv, cluster) for bv in batches]
+        if not cluster.tel.alive.any():
+            raise RuntimeError("no alive instances to schedule onto")
+        if self._fused is None:
+            from .hotpath import FusedHotPath
+            self._fused = FusedHotPath.for_bundle(
+                self.bundle, cluster.instances, self.cfg)
+        slices = [bv.columns(self.bundle.encoder) for bv in batches]
+        lazies = self._fused.decide_cols_multi(slices, cluster.tel)
+        return [AssignmentResult(cluster.instances, lz)
+                for lz in lazies]
 
     def _decide_fused(self, batch: BatchView, sim: ClusterSim):
         """Single-dispatch path: one jitted device program per batch

@@ -1,0 +1,362 @@
+"""Pallas decision megakernel: the whole RouteBalance per-batch
+decision — KNN top-k, packed-GBM TPOT heads, Eq. 2 admission,
+prefix-affinity and the LPT greedy scan — as ONE kernel dispatch
+(ROADMAP item 4).
+
+The fused XLA backend (`repro.core.hotpath`) already runs the decision
+as a single jitted program, but XLA still materializes every stage
+boundary (the (R, N) distance matrix, the (R, M) label mixes, the
+(R, I) admission/affinity planes) as separate HBM buffers between
+fusions, and the greedy scan lowers to a `lax.scan` whose per-step
+carry round-trips through loop state XLA owns. This kernel hand-places
+the whole pipeline instead:
+
+  * **stage 1 — KNN top-k**, the `knn_topk` running-top-k idiom: the
+    (R, N) distance plane never leaves the kernel; per index tile, k
+    rounds of (min, argmin, replace-worst) maintain a (R, k) running
+    buffer, and the survivors are ordered by (distance, index) — the
+    exact `lax.top_k` tie order the staged backends see — before the
+    distance-weighted label mix. That form exists because `lax.top_k`
+    has no Mosaic/TPU-kernel lowering; under the interpreter (where the
+    body executes as plain XLA anyway) ``topk_mode="auto"`` routes the
+    selection through `lax.top_k` itself — bitwise the same survivors
+    and order (pinned by ``test_topk_running_matches_lax_topk_order``
+    and the forced-``"running"`` parity arm), ~20x cheaper than
+    emulating the k-round scan op by op;
+  * **stage 2 — packed GBM**: the per-tier TPOT heads walk their trees
+    via the shared `predict_packed_gathered` body, so the tree-by-tree
+    float32 accumulation keeps the numpy ensemble's bitwise rounding
+    order (`_accumulate` is the one definition);
+  * **stage 3 — Eq. 2 admission + affinity**: `admission_math` and
+    `hit_fraction` traced in-kernel over the same alive mask the fused
+    program uses;
+  * **stage 4 — LPT greedy scan**: a fori_loop over the R rows whose
+    per-step body IS `repro.core.decision_jax.greedy_step` (the one
+    definition shared with the staged/fused lax.scan), with the
+    dead-reckoned (d, b, free) carry held in loop registers/VMEM for
+    the whole R-loop — no per-stage HBM intermediates.
+
+**Multi-window batching**: the grid is (K,) over scheduler windows.
+Per-window inputs (embeddings, row masks, budgets, signatures) carry a
+leading K axis and block per program instance; the telemetry mirror
+and every estimator constant are shared blocks with constant index
+maps. K windows decided from one telemetry snapshot are independent by
+construction — the fused path reseeds the mirror from telemetry every
+batch, so K back-to-back `decide` calls on unmoved telemetry all scan
+from the same state — which is exactly what lets them share one
+dispatch bitwise-safely (`FusedHotPath.decide_cols_multi`).
+
+Execution modes: ``interpret=True`` (the default in this container,
+via ``REPRO_PALLAS_INTERPRET``) runs the kernel body on CPU for
+correctness/parity work; ``interpret=False`` compiles it with Mosaic
+on a real TPU (BlockSpecs are written for whole-block VMEM residency —
+at paper scale the operands total ~1.5 MB, well under a core's 16 MB).
+Parity against the fused/staged/numpy backends is asserted exactly in
+``tests/test_megakernel.py`` and the randomized soak.
+
+The numpy oracle is `repro.kernels.ref.decision_ref`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG = 3.4e38  # +inf stand-in for f32 distance masking (knn_topk.NEG)
+
+
+def _topk_running(d2, k: int, tile: int):
+    """The `knn_topk` running-top-k merge over column tiles of an
+    in-register distance plane: k rounds of (min, argmin,
+    replace-worst) per tile against a persistent (R, k) buffer.
+
+    The survivors are re-ordered by (distance, index) — `lax.top_k` is
+    a stable sort, so this is bit-for-bit the neighbor ORDER the
+    staged `topk_soft_lookup` feeds its label mix, which the weighted
+    sums need for exact parity (slot order in the running buffer is
+    insertion order, not tie order)."""
+    R, Np = d2.shape
+    vals = jnp.full((R, k), NEG, jnp.float32)
+    idx = jnp.full((R, k), -1, jnp.int32)
+    for t in range(0, Np, tile):
+        dt = d2[:, t:t + tile]                           # static slice
+        for _ in range(k):
+            m = jnp.min(dt, axis=1, keepdims=True)       # (R, 1)
+            am = jnp.argmin(dt, axis=1)                  # (R,)
+            gidx = am.astype(jnp.int32) + t
+            worst = jnp.max(vals, axis=1, keepdims=True)
+            wslot = jnp.argmax(vals, axis=1)
+            better = m < worst
+            onehot_w = (jax.lax.broadcasted_iota(
+                jnp.int32, vals.shape, 1) == wslot[:, None])
+            take = onehot_w & better
+            vals = jnp.where(take, m, vals)
+            idx = jnp.where(take, gidx[:, None], idx)
+            onehot_d = (jax.lax.broadcasted_iota(
+                jnp.int32, dt.shape, 1) == am[:, None])
+            dt = jnp.where(onehot_d, NEG, dt)
+    order = jnp.lexsort((idx, vals), axis=-1)            # (value, index)
+    return (jnp.take_along_axis(vals, order, axis=1),
+            jnp.take_along_axis(idx, order, axis=1))
+
+
+def _kernel(emb_ref, rv_ref, budgets_ref, len_in_ref, psig_ref,
+            d_ref, b_ref, free_ref, ctx_ref, alive_ref,
+            x_ref, xsq_ref, qual_ref, leng_ref,
+            m_of_i_ref, tier_of_i_ref, maxb_ref, price_in_ref,
+            price_out_ref, nominal_ref, sig_plane_ref,
+            gfeat_ref, gthr_ref, gleaf_ref, gbase_ref,
+            choice_ref, est_ref, lchosen_ref, d1_ref, b1_ref, f1_ref,
+            *, k: int, eps: float, weights, latency_mode: str,
+            lpt: bool, budget_filter: bool, w_aff: float,
+            use_gbm: bool, depth: int, lr: float, knn_tile: int,
+            topk_mode: str):
+    # deferred: repro.core imports repro.kernels-adjacent modules at
+    # package-init time; the kernel body only traces after everything
+    # is importable, so the shared one-definition math can be pulled in
+    # here without a cycle.
+    from repro.core.budget import admission_math, cost_matrix
+    from repro.core.decision_jax import greedy_step
+    from repro.estimators.gbm import predict_packed_gathered
+    from repro.estimators.knn import distance_weights
+    from repro.serving.affinity import hit_fraction
+
+    emb = emb_ref[0]                                     # (R, E)
+    rv = rv_ref[0]                                       # (R,)
+    budgets = budgets_ref[0].astype(jnp.float32)
+    len_in = len_in_ref[0].astype(jnp.float32)
+    d = d_ref[...]                                       # (I,) shared
+    b = b_ref[...]
+    free = free_ref[...]
+    ctx = ctx_ref[...]
+    alive = alive_ref[...]
+    m_of_i = m_of_i_ref[...]
+    nominal = nominal_ref[...]
+    R = emb.shape[0]
+
+    # -- stage 1: KNN top-k + distance-weighted label mix ------------------
+    # the distance expansion is spelled exactly as topk_soft_lookup's —
+    # same shapes, same op order — so the survivors' d2 values (and
+    # therefore the inverse-distance weights) are bitwise the staged
+    # backends'
+    x = x_ref[...]                                       # (N, E)
+    d2 = (xsq_ref[...][None, :] - 2.0 * emb @ x.T
+          + jnp.sum(emb * emb, -1, keepdims=True))       # (R, N)
+    if topk_mode == "running":
+        # Mosaic-lowerable selection (the compiled-TPU path): proven
+        # order-identical to lax.top_k (tests/test_megakernel.py)
+        d2k, nidx = _topk_running(d2, k, knn_tile)
+    else:
+        # interpret mode executes as XLA anyway, where lax.top_k IS the
+        # staged/fused selection — bitwise identical and ~20x cheaper
+        # than emulating the k-round running scan op by op
+        neg, nidx = jax.lax.top_k(-d2, k)
+        d2k = -neg
+    w = distance_weights(d2k, eps, jnp)
+    qual = (qual_ref[...][nidx] * w[..., None]).sum(1)   # (R, M)
+    leng = (leng_ref[...][nidx] * w[..., None]).sum(1)
+    q_inst = qual[:, m_of_i]                             # (R, I)
+    l_inst = leng[:, m_of_i]
+    pred_len_max = jnp.where(rv, leng.max(axis=1), -1e30)
+
+    # -- stage 2: packed-GBM TPOT heads ------------------------------------
+    b_eff = jnp.maximum(b, 1.0)
+    ctx_eff = jnp.maximum(ctx, 64.0)
+    if use_gbm:
+        feats = jnp.stack([b_eff, d, ctx_eff, b_eff * ctx_eff],
+                          axis=1).astype(jnp.float32)
+        stacked = {"feature": gfeat_ref[...],
+                   "threshold": gthr_ref[...],
+                   "leaf": gleaf_ref[...],
+                   "base": gbase_ref[...],
+                   "lr": lr, "depth": depth}
+        tpot = jnp.maximum(
+            predict_packed_gathered(stacked, tier_of_i_ref[...], feats),
+            1e-4)
+    else:
+        tpot = nominal
+
+    # -- stage 3: Eq. 2 admission + prefix affinity ------------------------
+    if budget_filter:
+        allowed, c_hat = admission_math(
+            budgets, len_in, l_inst, price_in_ref[...],
+            price_out_ref[...], jnp, valid=alive)
+    else:
+        c_hat = cost_matrix(len_in, l_inst, price_in_ref[...],
+                            price_out_ref[...], jnp)
+        allowed = jnp.broadcast_to(alive[None, :], c_hat.shape)
+    if w_aff > 0.0:
+        hit = hit_fraction(psig_ref[0], len_in, sig_plane_ref[...], jnp)
+        hit = jnp.where(alive[None, :], hit, jnp.float32(0.0))
+        aff = jnp.float32(w_aff) * hit
+    else:
+        aff = None
+
+    # -- stage 4: LPT order + dead-reckoned greedy scan --------------------
+    # the (d, b, free) carry lives in the fori_loop state for the whole
+    # R-loop; every step body is the shared `greedy_step` definition
+    if lpt:
+        order = jnp.argsort(-pred_len_max, stable=True)
+    else:
+        order = jnp.arange(R)
+    b0 = jnp.maximum(b_eff, 1.0)
+
+    def body(t, carry):
+        dc, bc, fc, picks, ests = carry
+        r = order[t]
+        dc, bc, fc, i, est = greedy_step(
+            r, dc, bc, fc, q_inst=q_inst, c_hat=c_hat, l_inst=l_inst,
+            tpot=tpot, nominal_tpot=nominal, b0=b0,
+            max_batch=maxb_ref[...], weights=weights,
+            latency_mode=latency_mode, allowed=allowed,
+            row_valid=rv, affinity=aff)
+        return (dc, bc, fc, picks.at[r].set(i), ests.at[r].set(est))
+
+    d1, b1, f1, choice, est_T = jax.lax.fori_loop(
+        0, R, body, (d, b_eff, free,
+                     jnp.zeros(R, jnp.int32), jnp.zeros(R, jnp.float32)))
+    l_chosen = jnp.take_along_axis(l_inst, choice[:, None], axis=1)[:, 0]
+
+    choice_ref[0] = choice
+    est_ref[0] = est_T
+    lchosen_ref[0] = l_chosen
+    d1_ref[0] = d1
+    b1_ref[0] = b1
+    f1_ref[0] = f1
+
+
+def decision_call(emb, row_valid, budgets, len_in, psig,
+                  d, b, free, ctx, alive,
+                  x, xsq, qual, leng,
+                  m_of_i, tier_of_i, maxb, price_in, price_out, nominal,
+                  sig_plane, gfeat, gthr, gleaf, gbase, *,
+                  k: int, eps: float, weights, latency_mode: str,
+                  lpt: bool, budget_filter: bool, w_aff: float,
+                  use_gbm: bool, depth: int, lr: float,
+                  knn_tile: int = 2048,
+                  topk_mode: str = "auto",
+                  interpret: Optional[bool] = None):
+    """The megakernel dispatch (traceable; jit at the call site).
+
+    Per-window args carry a leading K axis — emb (K, R, E), row_valid
+    (K, R) bool, budgets/len_in (K, R), psig (K, R, SIG_WIDTH) int32
+    (any (K, 1, 1) dummy when ``w_aff == 0``). Telemetry mirror
+    d/b/free/ctx (I,) f32 + alive (I,) bool and every estimator
+    constant are shared across windows. GBM args may be 1-element
+    dummies when ``use_gbm`` is False. Returns
+    (choice (K, R) i32, est_T (K, R) f32, l_chosen (K, R) f32,
+    d1/b1/f1 (K, I) f32 post-scan dead-reckoned views).
+    """
+    if interpret is None:
+        from .ops import INTERPRET
+        interpret = INTERPRET
+    if topk_mode == "auto":
+        # stage-1 selection: the running-top-k idiom is the
+        # Mosaic-lowerable form (lax.top_k has no TPU-kernel lowering);
+        # under the interpreter both execute as XLA and top_k is the
+        # bitwise-identical, much cheaper staged-backend op. "running" /
+        # "topk" force either (the parity tests pin their equivalence).
+        topk_mode = "topk" if interpret else "running"
+    assert topk_mode in ("topk", "running"), topk_mode
+    K, R, E = emb.shape
+    I = d.shape[0]
+    N, M = qual.shape
+    S_req = psig.shape[1:]
+    S_pl = sig_plane.shape
+
+    def win(*block):
+        return pl.BlockSpec((1,) + block,
+                            lambda wi: (wi,) + (0,) * len(block))
+
+    def shared(*block):
+        return pl.BlockSpec(block, lambda wi: (0,) * len(block))
+
+    kern = functools.partial(
+        _kernel, k=k, eps=eps, weights=tuple(weights),
+        latency_mode=latency_mode, lpt=lpt, budget_filter=budget_filter,
+        w_aff=w_aff, use_gbm=use_gbm, depth=depth, lr=lr,
+        knn_tile=knn_tile, topk_mode=topk_mode)
+    return pl.pallas_call(
+        kern,
+        grid=(K,),
+        in_specs=[
+            win(R, E),                 # emb
+            win(R),                    # row_valid
+            win(R),                    # budgets
+            win(R),                    # len_in
+            win(*S_req),               # psig
+            shared(I), shared(I), shared(I), shared(I),   # d b free ctx
+            shared(I),                 # alive
+            shared(N, E),              # x
+            shared(N),                 # xsq
+            shared(N, M),              # qual
+            shared(N, M),              # leng
+            shared(I),                 # m_of_i
+            shared(I),                 # tier_of_i
+            shared(I),                 # maxb
+            shared(I),                 # price_in
+            shared(I),                 # price_out
+            shared(I),                 # nominal
+            shared(*S_pl),             # sig_plane
+            shared(*gfeat.shape),      # gbm feature
+            shared(*gthr.shape),       # gbm threshold
+            shared(*gleaf.shape),      # gbm leaf
+            shared(*gbase.shape),      # gbm base
+        ],
+        out_specs=[
+            win(R), win(R), win(R),    # choice, est_T, l_chosen
+            win(I), win(I), win(I),    # d1, b1, f1
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, R), jnp.int32),
+            jax.ShapeDtypeStruct((K, R), jnp.float32),
+            jax.ShapeDtypeStruct((K, R), jnp.float32),
+            jax.ShapeDtypeStruct((K, I), jnp.float32),
+            jax.ShapeDtypeStruct((K, I), jnp.float32),
+            jax.ShapeDtypeStruct((K, I), jnp.float32),
+        ],
+        interpret=interpret,
+    )(emb, row_valid, budgets, len_in, psig,
+      d, b, free, ctx, alive, x, xsq, qual, leng,
+      m_of_i, tier_of_i, maxb, price_in, price_out, nominal,
+      sig_plane, gfeat, gthr, gleaf, gbase)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "eps", "weights", "latency_mode", "lpt",
+                     "budget_filter", "w_aff", "use_gbm", "depth", "lr",
+                     "knn_tile", "topk_mode", "interpret"))
+def decision_megakernel(emb, row_valid, budgets, len_in, psig,
+                        d, b, free, ctx, alive,
+                        x, xsq, qual, leng,
+                        m_of_i, tier_of_i, maxb, price_in, price_out,
+                        nominal, sig_plane, gfeat, gthr, gleaf, gbase,
+                        *, k, eps, weights, latency_mode, lpt,
+                        budget_filter, w_aff, use_gbm, depth, lr,
+                        knn_tile: int = 2048, topk_mode: str = "auto",
+                        interpret: bool = True):
+    """Jitted standalone entry for tests/benches; production goes
+    through `FusedHotPath` (decision_backend="megakernel"), which
+    traces `decision_call` inside its own donated-buffer step."""
+    return decision_call(
+        emb, row_valid, budgets, len_in, psig, d, b, free, ctx, alive,
+        x, xsq, qual, leng, m_of_i, tier_of_i, maxb, price_in,
+        price_out, nominal, sig_plane, gfeat, gthr, gleaf, gbase,
+        k=k, eps=eps, weights=weights, latency_mode=latency_mode,
+        lpt=lpt, budget_filter=budget_filter, w_aff=w_aff,
+        use_gbm=use_gbm, depth=depth, lr=lr, knn_tile=knn_tile,
+        topk_mode=topk_mode, interpret=interpret)
+
+
+def dummy_gbm() -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """1-element placeholder GBM operands for ``use_gbm=False`` calls
+    (the static flag keeps the kernel from ever reading them)."""
+    return (np.zeros((1, 1, 1), np.int32),
+            np.zeros((1, 1, 1), np.float32),
+            np.zeros((1, 1, 1), np.float32),
+            np.zeros(1, np.float32))

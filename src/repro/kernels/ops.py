@@ -1,12 +1,16 @@
 """Jitted public wrappers over the Pallas kernels.
 
-``interpret=True`` everywhere in this container (CPU): the kernel bodies
-execute in Python for correctness validation; on TPU set interpret=False
-(the BlockSpecs are written for VMEM/MXU tiling).
+Execution mode is env-driven: ``REPRO_PALLAS_INTERPRET`` (default on)
+runs every kernel body through the Pallas interpreter — correct on the
+CPU containers this repo develops in. On a real TPU export
+``REPRO_PALLAS_INTERPRET=0`` and the same call sites compile with
+Mosaic (the BlockSpecs are written for VMEM/MXU tiling); no source
+edit required.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,7 +20,18 @@ from .decode_attention import decode_attention as decode_attention_kernel
 from .knn_topk import knn_topk as knn_topk_kernel
 from .ssd_scan import ssd_scan as ssd_scan_kernel
 
-INTERPRET = True   # flip on real TPU
+
+def env_interpret(default: bool = True) -> bool:
+    """The process-wide interpret switch: REPRO_PALLAS_INTERPRET unset
+    -> `default` (on: CPU container); "0"/"false"/"off"/"" -> compiled
+    TPU mode; anything else -> interpret."""
+    v = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if v is None:
+        return default
+    return v.strip().lower() not in ("0", "false", "off", "")
+
+
+INTERPRET = env_interpret()   # resolved once at import; flip via env
 
 
 def knn_topk(q, x, k: int = 10, tile: int = 512):
@@ -33,6 +48,16 @@ def decode_attention(q, k_cache, v_cache, cache_positions, pos,
 def ssd_scan(xh, Bm, Cm, dt, A, chunk: int = 128, head_tile: int = 8):
     return ssd_scan_kernel(xh, Bm, Cm, dt, A, chunk=chunk,
                            head_tile=head_tile, interpret=INTERPRET)
+
+
+def decision_megakernel(*args, **kwargs):
+    """The fused-decision megakernel at the env-selected interpret
+    mode (see `repro.kernels.decision_megakernel` for the signature).
+    Production reaches the kernel through `FusedHotPath`; this wrapper
+    is the direct kernel-level entry for tests and benches."""
+    from .decision_megakernel import decision_megakernel as _mk
+    kwargs.setdefault("interpret", INTERPRET)
+    return _mk(*args, **kwargs)
 
 
 # -- KNN estimator backend ---------------------------------------------------

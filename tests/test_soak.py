@@ -58,12 +58,13 @@ def _loaded_sim(run, seed, kill_frac=0.0):
         ClusterSim(run.tiers, run.names, seed=0), seed, kill_frac)
 
 
-def _decision_parity(run, seed, R, kill_frac=0.0, affinity_weight=0.0):
+def _decision_parity(run, seed, R, kill_frac=0.0, affinity_weight=0.0,
+                     backends=BACKENDS):
     reqs = run.requests(R, seed=seed)[:R]
     for r in reqs:
         r.arrival = 0.0
     out = {}
-    for be in BACKENDS:
+    for be in backends:
         rb = RouteBalance(RBConfig(decision_backend=be,
                                    affinity_weight=affinity_weight),
                           run.bundle(), run.tiers)
@@ -78,10 +79,18 @@ def _decision_parity(run, seed, R, kill_frac=0.0, affinity_weight=0.0):
         picked = [instances[int(i)].iid for i in choice]
         assert not dead.intersection(picked), (be, dead & set(picked))
         out[be] = (picked, np.asarray(l_chosen, np.float64))
-    assert out["numpy"][0] == out["jax"][0] == out["fused"][0]
-    np.testing.assert_array_equal(out["jax"][1], out["fused"][1])
-    np.testing.assert_allclose(out["fused"][1], out["numpy"][1],
-                               rtol=2e-4)
+    anchor = "fused" if "fused" in out else backends[0]
+    for be in backends:
+        assert out[be][0] == out[anchor][0], (be, anchor)
+        if be in (anchor, "numpy"):
+            continue
+        # every float32 backend (jax / fused / megakernel) must agree
+        # bitwise; the float64 numpy reference only to tolerance
+        np.testing.assert_array_equal(out[be][1], out[anchor][1],
+                                      err_msg=f"{be} vs {anchor}")
+    if "numpy" in out and anchor != "numpy":
+        np.testing.assert_allclose(out[anchor][1], out["numpy"][1],
+                                   rtol=2e-4)
 
 
 # -- decision-level soak ------------------------------------------------------
@@ -154,6 +163,51 @@ def test_soak_fused_matches_staged_jax_everywhere(seed, kill_frac):
     np.testing.assert_array_equal(out["jax"][1], out["fused"][1])
 
 
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_soak_decision_parity_megakernel_small(seed, kill_frac):
+    """Tier-1 subset for the Pallas megakernel backend: exact assignment
+    parity with the fused-XLA program (bitwise l_chosen included) and
+    the staged references on random rosters, with and without a quarter
+    of the fleet dead (alive-mask churn through the one-kernel path)."""
+    run = _run_for(seed, max_tiers=6, max_instances=32)
+    _decision_parity(run, seed, R=16, kill_frac=kill_frac,
+                     backends=("numpy", "fused", "megakernel"))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_soak_decision_parity_megakernel_affinity_small(seed):
+    """Megakernel with the prefix-affinity term live: the in-kernel
+    integer sig compares + float32 discount must stay bitwise the fused
+    program's on warmed random sketches."""
+    run = _run_for(seed, max_tiers=6, max_instances=32)
+    _decision_parity(run, seed, R=16, affinity_weight=0.35,
+                     backends=("numpy", "fused", "megakernel"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(10)))
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+def test_soak_decision_parity_megakernel_full(seed, kill_frac):
+    """Full megakernel soak: 16-tier x 128-instance worlds, exact
+    four-way parity on every seed — the megakernel traces the SAME
+    shared stage math as the fused program (greedy_step, admission_math,
+    masked_score, packed GBM), so no tolerance is needed against it."""
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    _decision_parity(run, seed, R=48, kill_frac=kill_frac,
+                     backends=("numpy", "jax", "fused", "megakernel"))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(10)))
+@pytest.mark.parametrize("kill_frac", [0.0, 0.25])
+def test_soak_decision_parity_megakernel_affinity_full(seed, kill_frac):
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    _decision_parity(run, seed, R=48, kill_frac=kill_frac,
+                     affinity_weight=0.35,
+                     backends=("numpy", "fused", "megakernel"))
+
+
 # -- serving-level soak -------------------------------------------------------
 
 def _trajectory(run, be, reqs_seed, n):
@@ -175,6 +229,20 @@ def test_soak_e2e_trajectory_small(seed):
     for k in ("quality", "mean_e2e", "cost_per_req", "goodput"):
         assert results["fused"][1][k] == pytest.approx(
             results["numpy"][1][k], rel=1e-9), k
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_soak_e2e_trajectory_megakernel(seed):
+    """A full cluster run under the megakernel backend lands on the
+    fused backend's trajectory request-for-request (same failure
+    schedule, same metrics)."""
+    run = _run_for(seed, max_tiers=5, max_instances=20)
+    results = {be: _trajectory(run, be, seed, n=40)
+               for be in ("fused", "megakernel")}
+    assert results["megakernel"][0] == results["fused"][0]
+    for k in ("quality", "mean_e2e", "cost_per_req", "goodput"):
+        assert results["megakernel"][1][k] == pytest.approx(
+            results["fused"][1][k], rel=1e-12), k
 
 
 @pytest.mark.slow
