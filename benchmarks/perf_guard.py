@@ -176,6 +176,50 @@ def _affinity_disabled_guard() -> bool:
     return ratio <= 1.05
 
 
+def _hierarchy_guard() -> bool:
+    """The hierarchical wrapper must be ~free at one cell: a 1-cell
+    balanced `HierarchicalScheduler` (cell telemetry mirror, digest
+    loop, recovery router — the whole control plane) runs the same
+    trace as the plain fused controller and must stay within 1.10x of
+    its wall-clock (min-of-3, same-box relative comparison; re-timed
+    once before failing). This gates the PR-10 seam: the per-cell
+    views may not tax the single-controller configuration everyone
+    runs by default."""
+    import time
+
+    from repro.core import RBConfig, RouteBalance
+    from repro.serving.hierarchy import HierarchyConfig, build_scheduler
+    from repro.serving.scenarios import get_scenario
+
+    tol = 1.10
+    run = get_scenario("cluster").build(dataset_n=200)
+    bundle = run.bundle()
+    cfg = RBConfig(charge_compute=False)
+    hcfg = HierarchyConfig(n_cells=1, routing="balanced")
+
+    def cell(hier):
+        reqs = run.requests(120, seed=0)
+        sched = (build_scheduler(cfg, bundle, run.tiers, hcfg) if hier
+                 else RouteBalance(cfg, bundle, run.tiers))
+        t0 = time.perf_counter()
+        m = run.run_cell(sched, reqs, seed=0)
+        assert m["failed"] == 0
+        return time.perf_counter() - t0
+
+    cell(False), cell(True)             # warm-up: compiles and caches
+    flat = min(cell(False) for _ in range(3))
+    hier = min(cell(True) for _ in range(3))
+    ratio = hier / flat
+    if ratio > tol:                     # re-time once to shed noise
+        ratio = min(ratio, min(cell(True) for _ in range(3))
+                    / min(cell(False) for _ in range(3)))
+    verdict = "ok" if ratio <= tol else "REGRESSED"
+    print(f"hierarchy (1-cell balanced vs flat fused): "
+          f"{hier * 1e3:.1f} ms vs {flat * 1e3:.1f} ms "
+          f"({ratio:.2f}x, tol {tol:.2f}x) {verdict}")
+    return ratio <= tol
+
+
 def _megakernel_guard(fresh: dict) -> bool:
     """The one-kernel decision must hold parity-or-better against the
     fused-XLA pipeline: for every smoke cell, the megakernel row's
@@ -256,6 +300,8 @@ def main() -> int:
         failures.append(("recovery_hooks_fault_free", "overhead"))
     if not _affinity_disabled_guard():
         failures.append(("affinity_term_disabled", "overhead"))
+    if not _hierarchy_guard():
+        failures.append(("hierarchy_1cell_vs_flat", "overhead"))
     if failures:
         print(f"PERF REGRESSION: {failures}")
         return 1

@@ -16,7 +16,7 @@ import traceback
 MODULES = ("predictors", "kernels_bench", "decision_core", "hotpath",
            "sweep", "replay", "frontier", "residual", "isolation",
            "batching", "budget", "tier_loss", "ladder", "tails",
-           "roofline", "elastic", "chaos", "affinity")
+           "roofline", "elastic", "chaos", "affinity", "hierarchy")
 
 
 def main() -> None:

@@ -2,9 +2,14 @@
 RouteBalance stack sweeping its weight vector across the frontier, vs
 an engineering-equalized BEST-Route baseline, all through the SAME
 `ServingEngine` (only the `SchedulingPolicy` and the `deployment=` knob
-differ) — the paper's headline experiment in miniature.
+differ) — the paper's headline experiment in miniature. A final arm
+runs the hierarchical path end to end: the same roster partitioned into
+--cells scheduling cells, per-cell RouteBalance engines, and a
+GlobalBalancer routing arrivals from telemetry digests exchanged every
+--digest-interval seconds.
 
     PYTHONPATH=src python examples/serve_cluster.py [--lam 12] [--n 600]
+        [--cells 2] [--digest-interval 0.25]
 """
 import argparse
 
@@ -20,6 +25,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--lam", type=float, default=12.0)
     ap.add_argument("--n", type=int, default=600)
+    ap.add_argument("--cells", type=int, default=2,
+                    help="scheduling cells for the hierarchical arm")
+    ap.add_argument("--digest-interval", type=float, default=0.25,
+                    help="seconds between per-cell telemetry digests")
     args = ap.parse_args()
 
     world, names = paper_world(seed=0)
@@ -57,6 +66,22 @@ def main():
     # the as-published deployment, one knob away: serial scoring
     m = cell("bestroute-sq", "serial_published", threshold=0.5)
     show("bestroute-sq/t0.5 (serial)", m)
+    # the hierarchical path end to end: same roster split into cells,
+    # per-cell engines, digest-routed GlobalBalancer
+    from repro.core import RBConfig
+    from repro.serving.hierarchy import HierarchyConfig, build_scheduler
+    sched = build_scheduler(
+        RBConfig(weights=PRESETS["uniform"]), bundle, tiers,
+        HierarchyConfig(n_cells=args.cells,
+                        digest_interval_s=args.digest_interval))
+    reqs = make_requests(ds, "test",
+                         poisson_arrivals(args.lam, args.n, seed=1))
+    m = run_cell(sched, tiers, names, reqs)
+    show(f"routebalance/uniform ({args.cells} cells)", m)
+    bal = sched.balancer
+    print(f"{'':32s} digests={bal.digests_sent} "
+          f"wire_bytes={bal.bytes_sent} "
+          f"imbalance={bal.imbalance():.3f}")
 
 
 if __name__ == "__main__":

@@ -66,7 +66,7 @@ from repro.estimators.knn import topk_soft_lookup
 from repro.serving.affinity import SIG_WIDTH, SKETCH_SLOTS, hit_fraction
 
 from .budget import admission_math, cost_matrix
-from .decision_jax import _greedy_scan, bucket_pow2
+from .decision_jax import _greedy_scan, bucket_pow2, sharded_greedy_scan
 
 
 def _new_stats() -> Dict:
@@ -128,7 +128,13 @@ class FusedHotPath:
         key = (roster, backend, cfg.latency_mode, bool(cfg.lpt),
                bool(cfg.budget_filter), bool(cfg.learned_tpot),
                tuple(float(w) for w in cfg.weights),
-               float(getattr(cfg, "affinity_weight", 0.0)))
+               float(getattr(cfg, "affinity_weight", 0.0)),
+               # hierarchical scheduling: the cell-sharded scan compiles
+               # a different program, and per-cell engines (cell_tag)
+               # each need their own carried telemetry mirror even when
+               # their rosters happen to be signature-identical
+               int(getattr(cfg, "shard_cells", 0) or 0),
+               getattr(cfg, "cell_tag", None))
         cache = bundle.__dict__.setdefault("_fused_cache", {})
         runner = cache.get(key)
         if runner is None:
@@ -194,6 +200,30 @@ class FusedHotPath:
         self._lpt = bool(cfg.lpt)
         self._budget_filter = bool(cfg.budget_filter)
         self._weights = tuple(float(w) for w in cfg.weights)
+        # cell-sharded scan (hierarchical scheduling): the pow2 column
+        # axis splits into shard_cells contiguous blocks, combined with
+        # exact max/argmax reductions — bitwise the single-controller
+        # scan (see decision_jax.sharded_greedy_scan). The mesh comes
+        # from the active shardctx when the launcher pinned one with a
+        # matching "cell" axis, else launch.mesh.make_cell_mesh (which
+        # degrades to None -> single-program emulation on hosts without
+        # the devices).
+        self._shard_cells = int(getattr(cfg, "shard_cells", 0) or 0)
+        self._cell_mesh = None
+        if self._shard_cells > 1:
+            assert self._backend == "fused", \
+                "shard_cells requires the fused backend (the megakernel" \
+                " scan is a single monolithic dispatch)"
+            assert self._Itot % self._shard_cells == 0, \
+                (self._Itot, self._shard_cells)
+            from repro.distributed.shardctx import current as _shardctx
+            mesh, _ = _shardctx()
+            if (mesh is not None and "cell" in mesh.axis_names
+                    and mesh.shape["cell"] == self._shard_cells):
+                self._cell_mesh = mesh
+            else:
+                from repro.launch.mesh import make_cell_mesh
+                self._cell_mesh = make_cell_mesh(self._shard_cells)
         # prefix-affinity term: compiled in only when the weight is
         # nonzero — the disabled program is the pre-affinity program
         # verbatim (the dummy sig args below are dead inputs XLA drops),
@@ -377,10 +407,9 @@ class FusedHotPath:
             order = jnp.argsort(-pred_len_max, stable=True)
         else:
             order = jnp.arange(q_inst.shape[0])
-        choice, est_T, (d1, b1, f1) = _greedy_scan(
-            order, q_inst, c_hat, l_inst, tpot, self._nominal,
-            d, b_eff, free, self._maxb, self._weights, allowed,
-            self._mode, row_valid=row_valid, affinity=aff)
+        choice, est_T, (d1, b1, f1) = self._scan(
+            order, q_inst, c_hat, l_inst, tpot, d, b_eff, free,
+            allowed, row_valid, aff)
         l_chosen = jnp.take_along_axis(l_inst, choice[:, None],
                                        axis=1)[:, 0]
         # the refreshed pre-scan mirror (d, b, free, ctx) is the carried
@@ -388,6 +417,25 @@ class FusedHotPath:
         # for diagnostics/invariant checks only — the next batch reseeds
         # from telemetry just like the staged backends
         return (choice, est_T, l_chosen, d, b, free, ctx, d1, b1, f1)
+
+    def _scan(self, order, q_inst, c_hat, l_inst, tpot, d, b_eff, free,
+              allowed, row_valid, aff):
+        """Stage-4 greedy scan, factored so the scan strategy is the
+        one seam hierarchical runners interpose on: the
+        single-controller program traces `_greedy_scan`; with
+        ``shard_cells > 1`` the bitwise-identical cell-sharded
+        decomposition runs instead (single-program emulation or
+        shard_map over the cell mesh)."""
+        if self._shard_cells > 1:
+            return sharded_greedy_scan(
+                order, q_inst, c_hat, l_inst, tpot, self._nominal,
+                d, b_eff, free, self._maxb, self._weights, allowed,
+                self._mode, row_valid=row_valid, affinity=aff,
+                n_cells=self._shard_cells, mesh=self._cell_mesh)
+        return _greedy_scan(
+            order, q_inst, c_hat, l_inst, tpot, self._nominal,
+            d, b_eff, free, self._maxb, self._weights, allowed,
+            self._mode, row_valid=row_valid, affinity=aff)
 
     def _step_multi_impl(self, emb, row_valid, budgets, len_in,
                          d, b, free, ctx, alive,

@@ -83,6 +83,21 @@ class RBConfig:
     #                                    Eq. 1 simplex (sums to 1);
     #                                    affinity is a discount on the
     #                                    latency term, not a 4th vertex.
+    shard_cells: int = 0               # hierarchical "span" routing:
+    #                                    > 1 splits the fused scan's
+    #                                    pow2 instance-column axis into
+    #                                    that many cells (pow2, fused
+    #                                    backend only), combined with
+    #                                    exact reductions — bitwise the
+    #                                    single-controller decision on
+    #                                    any cell count. 0/1 = the
+    #                                    unsharded program verbatim.
+    cell_tag: Optional[int] = None     # per-cell engine identity under
+    #                                    serving.hierarchy "balanced"
+    #                                    routing: keys the FusedHotPath
+    #                                    cache so signature-identical
+    #                                    cell rosters still get their
+    #                                    own carried telemetry mirrors.
 
 
 class EstimatorBundle:
@@ -181,6 +196,11 @@ class RouteBalancePolicy(SchedulingPolicy):
             cfg.knn_backend
         assert cfg.latency_mode in LATENCY_MODES, cfg.latency_mode
         assert 0.0 <= cfg.affinity_weight <= 1.0, cfg.affinity_weight
+        sc = int(cfg.shard_cells or 0)
+        assert sc >= 0 and (sc & (sc - 1)) == 0, \
+            f"shard_cells must be a power of two, got {cfg.shard_cells}"
+        assert sc <= 1 or cfg.decision_backend == "fused", \
+            "shard_cells > 1 requires decision_backend='fused'"
         self.bundle = None
         self._fused = None                    # lazily-built FusedHotPath
 
@@ -238,31 +258,33 @@ class RouteBalancePolicy(SchedulingPolicy):
         if (self.cfg.decision_backend != "megakernel"
                 or len(batches) <= 1):
             return [self.assign(bv, cluster) for bv in batches]
-        if not cluster.tel.alive.any():
-            raise RuntimeError("no alive instances to schedule onto")
-        if self._fused is None:
-            from .hotpath import FusedHotPath
-            self._fused = FusedHotPath.for_bundle(
-                self.bundle, cluster.instances, self.cfg)
+        runner = self._fused_runner(cluster)
         slices = [bv.columns(self.bundle.encoder) for bv in batches]
-        lazies = self._fused.decide_cols_multi(slices, cluster.tel)
+        lazies = runner.decide_cols_multi(slices, cluster.tel)
         return [AssignmentResult(cluster.instances, lz)
                 for lz in lazies]
 
-    def _decide_fused(self, batch: BatchView, sim: ClusterSim):
-        """Single-dispatch path: one jitted device program per batch
-        over the full instance roster (dead instances masked), staged
-        from the SoA ingest columns."""
+    def _fused_runner(self, sim: ClusterSim):
+        """The lazily-built FusedHotPath over this sim's roster — THE
+        seam hierarchical policies interpose on (a sharded runner, a
+        per-cell runner), shared by `assign` and `assign_windows`."""
         if not sim.tel.alive.any():
             raise RuntimeError("no alive instances to schedule onto")
         if self._fused is None:
             from .hotpath import FusedHotPath
             self._fused = FusedHotPath.for_bundle(
                 self.bundle, sim.instances, self.cfg)
+        return self._fused
+
+    def _decide_fused(self, batch: BatchView, sim: ClusterSim):
+        """Single-dispatch path: one jitted device program per batch
+        over the full instance roster (dead instances masked), staged
+        from the SoA ingest columns."""
+        runner = self._fused_runner(sim)
         # direct callers (tests, benches) arrive without a column
         # slice: derive one, building ephemeral columns if needed
         cols, rows = batch.columns(self.bundle.encoder)
-        return sim.instances, self._fused.decide_cols(cols, rows, sim.tel)
+        return sim.instances, runner.decide_cols(cols, rows, sim.tel)
 
     def _decide_staged(self, batch: BatchView, sim: ClusterSim):
         cfg = self.cfg

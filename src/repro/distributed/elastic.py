@@ -1,22 +1,20 @@
-"""Elastic serving-cluster membership + straggler handling.
+"""Elastic membership + staleness for the hierarchical control plane.
 
-The scheduler's view of the cluster is a registry of instances with
-heartbeat timestamps. Instances that miss heartbeats are quarantined
-(stop receiving traffic) and re-admitted when they return — scale-up is
-just registration (the KNN estimator and per-tier heads are tier-local,
-so no retraining; §6.8's tier-loss result is the degenerate case).
-Straggler mitigation: telemetry staleness inflates an instance's
-dead-reckoned pending work, so slow/unresponsive instances organically
-stop attracting traffic before the hard timeout trips.
+A registry of peers with heartbeat timestamps: peers that miss
+heartbeats are quarantined (stop receiving traffic) and re-admitted
+when they return. The hierarchical scheduler
+(`repro.serving.hierarchy.GlobalBalancer`) registers each CELL as a
+member — a digest arrival is the heartbeat — so cell-level liveness
+rides the same quarantine/re-admit discipline the telemetry watchdog
+applies to instance rows. `staleness_penalty` is the soft arm:
+digest age inflates a cell's apparent load, so a cell whose control
+plane lags organically sheds traffic before the hard timeout darkens
+it entirely.
 """
 from __future__ import annotations
 
 import dataclasses
-import json
-import pathlib
-from typing import Dict, List, Optional
-
-import numpy as np
+from typing import Dict, List
 
 
 @dataclasses.dataclass
@@ -25,7 +23,6 @@ class MemberState:
     tier: str
     last_heartbeat: float
     quarantined: bool = False
-    dispatches: int = 0
 
 
 class ElasticMembership:
@@ -37,9 +34,6 @@ class ElasticMembership:
 
     def register(self, iid: str, tier: str, now: float):
         self.members[iid] = MemberState(iid, tier, now)
-
-    def deregister(self, iid: str):
-        self.members.pop(iid, None)
 
     def heartbeat(self, iid: str, now: float):
         m = self.members.get(iid)
@@ -65,20 +59,3 @@ class ElasticMembership:
             return float("inf")
         age = max(now - m.last_heartbeat, 0.0)
         return 1.0 + self.decay * age / max(self.timeout, 1e-9)
-
-    # -- scheduler-state persistence (restart-safe scheduling layer) -----
-    def save(self, path: str):
-        data = {iid: dataclasses.asdict(m)
-                for iid, m in self.members.items()}
-        p = pathlib.Path(path)
-        tmp = p.with_suffix(".tmp")
-        tmp.write_text(json.dumps(data))
-        tmp.rename(p)
-
-    @classmethod
-    def load(cls, path: str, **kw) -> "ElasticMembership":
-        em = cls(**kw)
-        data = json.loads(pathlib.Path(path).read_text())
-        for iid, m in data.items():
-            em.members[iid] = MemberState(**m)
-        return em

@@ -5,7 +5,10 @@ Model code calls ``constrain(x, "residual")`` etc. — a no-op unless a
 ``sharding_rules(mesh, residual=P(...))`` context is active (so CPU unit
 tests and the serving engine run the exact same code with zero overhead).
 ``current()`` exposes (mesh, rules) so layers that need ``shard_map``
-(e.g. the data-local MoE dispatch) can build it.
+(e.g. the data-local MoE dispatch) can build it — and since the
+hierarchical scheduler it is also the fused hot path's mesh source: a
+launcher that pins a ``("cell",)`` mesh here gets the decision scan
+sharded across cells (`repro.core.hotpath`).
 """
 from __future__ import annotations
 
@@ -20,10 +23,6 @@ _STATE: Dict[str, Any] = {"mesh": None, "rules": {}}
 
 def current() -> Tuple[Optional[jax.sharding.Mesh], Dict[str, P]]:
     return _STATE["mesh"], _STATE["rules"]
-
-
-def active() -> bool:
-    return _STATE["mesh"] is not None
 
 
 @contextlib.contextmanager

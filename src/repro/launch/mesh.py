@@ -26,3 +26,16 @@ def make_host_mesh():
     """1x1 mesh on the available device(s) — for CPU tests/examples."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_cell_mesh(n_cells: int):
+    """("cell",)-axis mesh for the cell-sharded decision scan
+    (hierarchical scheduling): one device per cell. Returns None when
+    the host lacks the devices — callers fall back to the
+    bitwise-identical single-program cell emulation, so a CPU box (one
+    device by default; more via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``) runs the
+    same logical decision without the collectives."""
+    if n_cells <= 1 or jax.device_count() < n_cells:
+        return None
+    return jax.make_mesh((n_cells,), ("cell",))

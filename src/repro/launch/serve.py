@@ -17,6 +17,15 @@ registry (RouteBalance plus the router x dispatcher baseline grid);
 scoring, concurrent equalized worker-pool scoring, serial_published
 one-call-per-request as-published, microbatch collector) — every
 combination runs through the one `ServingEngine`.
+
+--cells > 1 runs the hierarchical scheduler (`repro.serving.hierarchy`,
+routebalance policy only): the roster is partitioned into cells, each
+with its own RouteBalance engine, and a GlobalBalancer assigns arrivals
+from compressed telemetry digests exchanged every --digest-interval
+seconds (usable for --digest-stale seconds; --digest-mode picks the
+exact float32 or lossy int8 wire codec). --cell-routing span instead
+shards the fused instance-column scan of ONE logical controller over
+the cells (bitwise-identical decisions at any cell count).
 """
 from __future__ import annotations
 
@@ -50,6 +59,22 @@ def main():
     ap.add_argument("--arrivals", default="poisson",
                     choices=("poisson", "gamma", "square", "flash"))
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cells", type=int, default=1,
+                    help="partition the roster into N scheduling cells "
+                         "(hierarchical path; routebalance only)")
+    ap.add_argument("--cell-routing", default="balanced",
+                    choices=("span", "balanced"),
+                    help="balanced: per-cell engines + digest-routed "
+                         "GlobalBalancer; span: one logical decision "
+                         "sharded across cells")
+    ap.add_argument("--digest-interval", type=float, default=0.25,
+                    help="seconds between per-cell telemetry digests")
+    ap.add_argument("--digest-stale", type=float, default=1.0,
+                    help="digest staleness bound (cell goes dark past "
+                         "this age)")
+    ap.add_argument("--digest-mode", default="exact",
+                    choices=("exact", "int8"),
+                    help="digest wire codec")
     args = ap.parse_args()
 
     from repro.core import (EngineConfig, EstimatorBundle, PRESETS,
@@ -64,14 +89,42 @@ def main():
         w = tuple(float(x) for x in args.weights.split(","))
     policy_kw = dict(weights=w) if args.policy == "routebalance" else {}
 
+    def hier_sched(bundle, tiers):
+        from repro.core import RBConfig
+        from repro.serving.hierarchy import (HierarchyConfig,
+                                             build_scheduler)
+        assert args.policy == "routebalance", \
+            "--cells > 1 requires the routebalance policy"
+        return build_scheduler(
+            RBConfig(weights=w), bundle, tiers,
+            HierarchyConfig(n_cells=args.cells,
+                            routing=args.cell_routing,
+                            digest_interval_s=args.digest_interval,
+                            digest_stale_s=args.digest_stale,
+                            digest_mode=args.digest_mode))
+
+    def hier_cols(m, eng):
+        m["cells"] = args.cells
+        m["cell_routing"] = args.cell_routing
+        bal = getattr(eng, "balancer", None)
+        if bal is not None:
+            m["intercell_imbalance"] = round(bal.imbalance(), 4)
+            m["digests"] = bal.digests_sent
+            m["digest_bytes"] = bal.bytes_sent
+
     if args.scenario:
         from repro.serving.scenarios import get_scenario
         run = get_scenario(args.scenario).build(dataset_n=6000)
         reqs = run.requests(args.n, lam_scale=args.lam_scale,
                             seed=args.seed)
-        eng = run.engine(run.policy(args.policy, **policy_kw),
-                         deployment=args.deployment)
+        if args.cells > 1:
+            eng = hier_sched(run.bundle(), run.tiers)
+        else:
+            eng = run.engine(run.policy(args.policy, **policy_kw),
+                             deployment=args.deployment)
         m = run.run_cell(eng, reqs, seed=args.seed)
+        if args.cells > 1:
+            hier_cols(m, eng)
         m["scenario"] = args.scenario
         m["n_instances"] = run.n_instances
     else:
@@ -89,11 +142,16 @@ def main():
         reqs = make_requests(
             ds, "test", make_arrivals(args.arrivals, args.lam, args.n,
                                       seed=args.seed))
-        policy = fit_policy(args.policy, bundle, tiers, names, ds,
-                            **policy_kw)
-        eng = ServingEngine(policy, bundle, tiers,
-                            EngineConfig(deployment=args.deployment))
+        if args.cells > 1:
+            eng = hier_sched(bundle, tiers)
+        else:
+            policy = fit_policy(args.policy, bundle, tiers, names, ds,
+                                **policy_kw)
+            eng = ServingEngine(policy, bundle, tiers,
+                                EngineConfig(deployment=args.deployment))
         m = run_cell(eng, tiers, names, reqs, seed=args.seed)
+        if args.cells > 1:
+            hier_cols(m, eng)
     print(json.dumps({k: v for k, v in m.items()
                       if not isinstance(v, tuple)}, indent=1,
                      default=str))

@@ -183,3 +183,12 @@ def residual_spec(mesh: Mesh, seq_shard: bool = False) -> P:
     if seq_shard:
         return P(ba, "model", None)
     return P(ba, None, None)
+
+
+def cell_specs() -> Tuple[P, P, P]:
+    """Layout for the cell-sharded decision scan
+    (`repro.core.decision_jax.sharded_greedy_scan` under shard_map over
+    a `make_cell_mesh` mesh): per-request planes (R, C, Ic) split on the
+    cell axis, per-instance state (C, Ic) likewise, per-request vectors
+    (R,) replicated. Returns (plane_spec, state_spec, replicated)."""
+    return P(None, "cell", None), P("cell", None), P(None)

@@ -607,6 +607,25 @@ SCENARIOS: Dict[str, Scenario] = {
                        arrival_kw=(("cv", 2.0),)),
             TenantSpec("batch", 10.0, budget_frac=0.4),
         )),
+    # The 10k-instance world the hierarchical scheduler
+    # (`repro.serving.hierarchy`) exists for: a single fused controller
+    # scans a 16384-row bucket per decision; partitioned into 8-32
+    # cells each engine rides a 1024-2048 bucket while the
+    # GlobalBalancer spreads the fleet-rate multi-tenant arrival mix
+    # from per-cell digests. Built only by `benchmarks/hierarchy.py`
+    # and opt-in tests — a 10k roster is deliberately not tier-1.
+    "hyperfleet_10k": Scenario(
+        name="hyperfleet_10k", pool="synthetic", n_tiers=16,
+        n_instances=10000, seed=7,
+        tenants=(
+            TenantSpec("interactive", 220.0, arrival="gamma",
+                       arrival_kw=(("cv", 2.0),), len_band=(0.0, 0.7),
+                       priority=0),
+            TenantSpec("agents", 90.0, arrival="gamma",
+                       arrival_kw=(("cv", 3.0),),
+                       topics=("code", "math"), priority=1),
+            TenantSpec("batch", 90.0, budget_frac=0.5, priority=2),
+        )),
     # Elastic worlds: overload control armed on every sim. The 6-base
     # + 2-reserve roster is deliberate — bucket_pow2(6) == bucket_pow2
     # (8) == 8, so the autoscaler's whole range rides one compiled

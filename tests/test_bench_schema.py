@@ -451,3 +451,50 @@ def test_bench_chaos_artifact_schema_and_recovery():
     assert cc["identical"] == 1
     assert cc["dropped_events"] > 0
     assert cc["served"] == cc["served_ref"] == cc["n"]
+
+
+HIERARCHY_GRID_COLS = ("cells", "lam", "I", "decide_ms_per_req",
+                       "digest_interval_s", "digest_stale_s",
+                       "digest_mode", "digest_bytes_per_s", "digests",
+                       "imbalance", "goodput", "p50_e2e", "p99_e2e",
+                       "shed", "failed", "n")
+
+
+def test_bench_hierarchy_artifact_schema_and_headlines():
+    """The hierarchical-scheduling artifact: the exactness pins hold
+    (span sharding and the 1-cell balanced hierarchy agree with the
+    single fused controller on every request), every cells x load x
+    digest grid cell carries the two-level axes with a clean run and a
+    bounded inter-cell imbalance, and the headline acceptance gate
+    holds — the 16-cell hierarchy decides the 10k-instance
+    ``hyperfleet_10k`` world at <= 2.5 ms of controller compute per
+    request."""
+    doc = _load("BENCH_hierarchy.json")
+    _check_schema(doc, "hierarchy")
+    rows = {r["name"]: r for r in doc["rows"]}
+    # exactness pins: sharded span scan at 2 and 4 cells, full-
+    # trajectory parity for the 1-cell balanced hierarchy
+    for name in ("hierarchy/parity_span_cells2",
+                 "hierarchy/parity_span_cells4",
+                 "hierarchy/parity_balanced_1cell"):
+        assert rows[name]["agree"] == 1.0, name
+    grid = [r for r in doc["rows"] if "/grid_" in r["name"]]
+    assert grid, "no grid rows"
+    for r in grid:
+        for col in HIERARCHY_GRID_COLS:
+            assert col in r, f"{r['name']} missing {col}"
+        assert r["failed"] == 0, r["name"]
+        assert r["decide_ms_per_req"] >= 0
+        assert r["digest_bytes_per_s"] > 0
+        assert 0 <= r["imbalance"] < 1.0, r["name"]
+    assert {int(r["cells"]) for r in grid} >= {1, 2, 4}
+    assert {r["digest_mode"] for r in grid} == {"exact", "int8"}
+    # the 10k-instance headline: committed, clean, and under the
+    # acceptance bar (cells run as parallel controllers; this is the
+    # per-request decide compute on the controller that served it)
+    fleet = rows["hierarchy/hyperfleet_10k_c16"]
+    assert fleet["I"] == 10000
+    assert fleet["failed"] == 0
+    assert fleet["decide_ms_per_req"] <= 2.5, fleet["decide_ms_per_req"]
+    # the single-controller comparison row rides along for the story
+    assert rows["hierarchy/hyperfleet_10k_single"]["I"] == 10000

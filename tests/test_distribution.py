@@ -1,11 +1,17 @@
 """Distribution layer: sharding rules are always divisible, cache specs
-cover every leaf, elastic membership + staleness, HLO cost walker."""
+cover every leaf, elastic membership + staleness, telemetry digest
+codec (round-trip fidelity + the staleness contract), HLO cost
+walker."""
 import jax
 import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, input_specs, smoke_variant
+from repro.distributed.compression import (TelemetryDigest,
+                                           decode_digest, digest_fresh,
+                                           digest_from_telemetry,
+                                           encode_digest)
 from repro.distributed.elastic import ElasticMembership
 from repro.models import Model
 from repro.models.config import SHAPES
@@ -91,12 +97,78 @@ def test_elastic_membership_and_straggler():
     assert p1 > p0 >= 1.0
 
 
-def test_elastic_persistence(tmp_path):
-    em = ElasticMembership()
-    em.register("x", "tier", now=1.0)
-    em.save(str(tmp_path / "members.json"))
-    em2 = ElasticMembership.load(str(tmp_path / "members.json"))
-    assert "x" in em2.members
+def _digest(seed=0, T=5):
+    rng = np.random.default_rng(seed)
+    return TelemetryDigest(
+        cell=3, seq=17, t=12.625, n_alive=40, n_total=48,
+        tier_occupancy=rng.random(T).astype(np.float32),
+        tier_depth=(rng.random(T) * 900).astype(np.float32),
+        tier_free=np.floor(rng.random(T) * 30).astype(np.float32))
+
+
+def test_digest_roundtrip_exact_bitwise():
+    d = _digest()
+    wire = encode_digest(d, mode="exact")
+    d2 = decode_digest(wire)
+    assert (d2.cell, d2.seq, d2.t) == (d.cell, d.seq, d.t)
+    assert (d2.n_alive, d2.n_total) == (d.n_alive, d.n_total)
+    for k in ("tier_occupancy", "tier_depth", "tier_free"):
+        assert getattr(d, k).tobytes() == getattr(d2, k).tobytes(), k
+    # header + 3 raw float32 planes, nothing else on the wire
+    assert len(wire) == len(encode_digest(d, "exact"))
+    # re-encoding the decoded digest is byte-identical (stable codec)
+    assert encode_digest(d2, mode="exact") == wire
+
+
+def test_digest_int8_lossy_bounded_and_idempotent():
+    d = _digest(seed=1, T=8)
+    wire = encode_digest(d, mode="int8")
+    d2 = decode_digest(wire)
+    for k in ("tier_occupancy", "tier_depth", "tier_free"):
+        x, xq = getattr(d, k), getattr(d2, k)
+        scale = max(float(np.abs(x).max()) / 127.0, 1e-12)
+        assert np.max(np.abs(x - xq)) <= scale / 2 + 1e-7, k
+    # quantization is a projection: a second trip changes nothing
+    assert encode_digest(d2, mode="int8") == wire
+    # and the int8 wire is materially smaller than exact
+    assert len(wire) < len(encode_digest(d, mode="exact"))
+
+
+def test_digest_from_telemetry_masks_dead_rows():
+    from repro.serving.cluster import ClusterSim
+    from repro.serving.scenarios import get_scenario
+    run = get_scenario("paper").build(dataset_n=60)
+    sim = ClusterSim(run.tiers, run.names, seed=0)
+    tier_names = [t.name for t in run.tiers]
+    tos = np.array([tier_names.index(i.tier.name)
+                    for i in sim.instances])
+    d0 = digest_from_telemetry(sim.tel, tos, len(tier_names),
+                               cell=0, seq=0, t=0.0)
+    assert d0.n_alive == len(sim.instances)
+    assert d0.free_total > 0
+    # kill a row: its capacity must vanish from the digest
+    sim.tel.kill(0)
+    d1 = digest_from_telemetry(sim.tel, tos, len(tier_names),
+                               cell=0, seq=1, t=0.5)
+    assert d1.n_alive == d0.n_alive - 1
+    assert d1.free_total < d0.free_total
+
+
+def test_digest_staleness_contract():
+    d = _digest()                       # sent at t=12.625
+    assert digest_fresh(d, now=12.625, stale_s=1.0)
+    assert digest_fresh(d, now=13.625, stale_s=1.0)   # boundary: usable
+    assert not digest_fresh(d, now=13.626, stale_s=1.0)
+    # the GlobalBalancer's membership wiring: digest arrival heartbeats
+    # the cell; a silent cell quarantines at the timeout and its
+    # penalty multiplier grows with digest age meanwhile
+    em = ElasticMembership(heartbeat_timeout=1.0)
+    em.register("cell0", "cell", now=0.0)
+    em.register("cell1", "cell", now=0.0)
+    em.heartbeat("cell0", 2.0)          # cell1's digests stopped
+    assert em.active(2.5) == ["cell0"]
+    assert (em.staleness_penalty("cell1", 0.9)
+            > em.staleness_penalty("cell0", 2.5))
 
 
 def test_hlo_walker_trip_counts():

@@ -1,0 +1,282 @@
+"""Hierarchical sharded scheduling (`repro.serving.hierarchy`): roster
+partitioning, the cell telemetry mirror's incremental-refresh contract,
+span-mode bitwise parity across cell counts, the balanced hierarchy's
+1-cell == single-controller trajectory proof, per-cell recovery, and
+the GlobalBalancer's digest-staleness routing discipline."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import RBConfig, RouteBalance
+from repro.serving.cluster import ClusterSim
+from repro.serving.hierarchy import (GlobalBalancer, HierarchicalScheduler,
+                                     HierarchyConfig, _CellTelemetry,
+                                     build_scheduler, partition_roster)
+from repro.serving.metrics import check_terminal_states
+from repro.serving.recovery import RecoveryConfig
+from repro.serving.scenarios import get_scenario, randomize_telemetry
+
+_RUNS = {}
+
+
+def _cluster(recovery=False):
+    key = ("cluster", recovery)
+    if key not in _RUNS:
+        sc = get_scenario("cluster")
+        if recovery:
+            sc = dataclasses.replace(sc, recovery=RecoveryConfig())
+        _RUNS[key] = sc.build(dataset_n=240)
+        _RUNS[key].bundle()
+    return _RUNS[key]
+
+
+def _traj(reqs):
+    return [(r.rid, r.instance, r.finish_time, r.tokens_out,
+             bool(r.failed), bool(r.shed), r.attempt) for r in reqs]
+
+
+# -- partitioning -------------------------------------------------------------
+
+@pytest.mark.parametrize("n_cells", [1, 2, 3, 4, 7])
+def test_partition_roster_properties(n_cells):
+    run = _cluster()
+    sim = ClusterSim(run.tiers, run.names, seed=0)
+    cells = partition_roster(sim.instances, n_cells)
+    assert len(cells) == n_cells
+    assert all(cells), "every cell must be non-empty"
+    seen = [i.iid for cell in cells for i in cell]
+    assert sorted(seen) == sorted(i.iid for i in sim.instances)
+    assert len(seen) == len(set(seen))           # disjoint
+    for cell in cells:
+        slots = [i.slot for i in cell]
+        assert slots == sorted(slots)            # parent-slot order
+    # round-robin within each tier: replica counts per tier differ by
+    # at most one across cells
+    for tier in {i.tier.name for i in sim.instances}:
+        counts = [sum(1 for i in cell if i.tier.name == tier)
+                  for cell in cells]
+        assert max(counts) - min(counts) <= 1, (tier, counts)
+
+
+def test_hierarchy_config_validation():
+    with pytest.raises(AssertionError):
+        HierarchyConfig(routing="nope")
+    with pytest.raises(AssertionError):
+        HierarchyConfig(n_cells=0)
+    with pytest.raises(AssertionError):
+        HierarchyConfig(digest_interval_s=0.0)
+    with pytest.raises(AssertionError):
+        HierarchyConfig(digest_interval_s=1.0, digest_stale_s=0.5)
+
+
+# -- the cell telemetry mirror ------------------------------------------------
+
+def test_cell_telemetry_mirror_refresh():
+    """The mirror copies parent rows bitwise, refreshes only rows whose
+    last_write stamp moved, and turns parent kill() (which deliberately
+    does NOT stamp last_write) into a local roster_version bump."""
+    run = _cluster()
+    sim = ClusterSim(run.tiers, run.names, seed=0)
+    slots = np.array([i.slot for i in sim.instances[::2]])
+    ct = _CellTelemetry(sim.tel, slots)
+    for name in ("pending", "batch", "free", "ctx", "queue", "t"):
+        np.testing.assert_array_equal(getattr(ct, name),
+                                      getattr(sim.tel, name)[slots])
+    v0, r0 = ct.version, ct.roster_version
+    assert ct.refresh() is ct            # no parent change: no-op
+    assert (ct.version, ct.roster_version) == (v0, r0)
+    # a write to a mirrored row propagates on refresh, bitwise
+    sim.tel.write(int(slots[1]), pending=123.5, batch=3, free=2,
+                  ctx=77.0, queue=4, t=1.25)
+    ct.refresh()
+    assert ct.version > v0
+    assert ct.pending[1] == 123.5 and ct.queue[1] == 4
+    assert len(ct.dirty_rows(v0)) == 1
+    # a write to a row OUTSIDE the cell must not dirty the mirror
+    outside = next(i.slot for i in sim.instances
+                   if i.slot not in set(slots.tolist()))
+    v1 = ct.version
+    sim.tel.write(outside, pending=9.0, batch=1, free=1, ctx=1.0,
+                  queue=0, t=1.5)
+    ct.refresh()
+    assert ct.version == v1
+    # kill: alive-array comparison catches it, roster_version bumps so
+    # the cell's fused runner full-reseeds its alive mask
+    sim.tel.kill(int(slots[0]))
+    ct.refresh()
+    assert ct.roster_version > r0
+    assert not ct.alive[0]
+
+
+# -- span routing: one logical decision, sharded scan -------------------------
+
+@pytest.mark.parametrize("n_cells", [2, 4])
+def test_span_parity_across_cell_counts(n_cells):
+    """The cell-sharded fused scan is bitwise the single controller on
+    randomized mid-run telemetry, dead rows included."""
+    run = _cluster()
+    reqs = run.requests(64, seed=9)
+    for r in reqs:
+        r.arrival = 0.0
+    plain = RouteBalance(RBConfig(charge_compute=False), run.bundle(),
+                         run.tiers)
+    span = RouteBalance(RBConfig(charge_compute=False,
+                                 shard_cells=n_cells),
+                        run.bundle(), run.tiers)
+    for trial, kill in ((0, 0.0), (1, 0.25)):
+        sim = randomize_telemetry(
+            ClusterSim(run.tiers, run.names, seed=0), trial, kill)
+        plain.sim = sim
+        insts0, c0, l0 = plain._decide_core(reqs[:32])
+        span.sim = sim
+        insts1, c1, l1 = span._decide_core(reqs[:32])
+        assert [insts0[int(i)].iid for i in c0] == \
+            [insts1[int(i)].iid for i in c1]
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
+def test_make_cell_mesh_falls_back_without_devices():
+    import jax
+
+    from repro.launch.mesh import make_cell_mesh
+    assert make_cell_mesh(1) is None
+    if jax.device_count() < 4:
+        assert make_cell_mesh(4) is None
+    else:
+        mesh = make_cell_mesh(4)
+        assert mesh.axis_names == ("cell",)
+
+
+def test_build_scheduler_span_returns_sharded_engine():
+    run = _cluster()
+    s = build_scheduler(RBConfig(), run.bundle(), run.tiers,
+                        HierarchyConfig(n_cells=4, routing="span"))
+    assert isinstance(s, RouteBalance)
+    assert s.cfg.shard_cells == 4
+    s1 = build_scheduler(RBConfig(), run.bundle(), run.tiers,
+                         HierarchyConfig(n_cells=2, routing="balanced"))
+    assert isinstance(s1, HierarchicalScheduler)
+
+
+# -- balanced routing: per-cell engines + global balancer ---------------------
+
+def test_balanced_1cell_trajectory_matches_single_controller():
+    """The exact-assignment parity pin: at one cell the hierarchy (cell
+    mirror, digest loop, global-expected parking) IS the single fused
+    controller — identical per-request trajectories on the same trace,
+    through the cluster scenario's failure schedule."""
+    run = _cluster()
+    cfg = RBConfig(charge_compute=False)
+    reqs_a = run.requests(90, seed=0)
+    run.run_cell(RouteBalance(cfg, run.bundle(), run.tiers), reqs_a,
+                 seed=0)
+    reqs_b = run.requests(90, seed=0)
+    h1 = build_scheduler(cfg, run.bundle(), run.tiers,
+                         HierarchyConfig(n_cells=1, routing="balanced"))
+    run.run_cell(h1, reqs_b, seed=0)
+    assert _traj(reqs_a) == _traj(reqs_b)
+
+
+def test_balanced_two_cells_runs_clean():
+    run = _cluster()
+    sched = build_scheduler(
+        RBConfig(charge_compute=False), run.bundle(), run.tiers,
+        HierarchyConfig(n_cells=2, routing="balanced"))
+    reqs = run.requests(80, seed=1)
+    m = run.run_cell(sched, reqs, seed=1)
+    check_terminal_states(reqs)
+    assert m["failed"] == 0
+    assert m["n"] + m["shed"] == len(reqs)
+    # driver-contract surfaces
+    assert m["policy"] == "routebalance"
+    assert m["deployment"] == "windowed"
+    assert sched.decisions + sched.shed_count == len(reqs)
+    # the control plane actually ran: digests crossed the wire and both
+    # cells took traffic
+    bal = sched.balancer
+    assert bal.digests_sent >= 2 and bal.bytes_sent > 0
+    assert all(bal.assigned_total[ci] > 0 for ci in (0, 1))
+    assert 0.0 <= bal.imbalance() < 1.0
+    # every dispatch stayed inside the chosen cell's roster
+    cell_iids = [{i.iid for i in cell} for cell in sched.cells]
+    for r in reqs:
+        if r.instance is not None:
+            assert any(r.instance in iids for iids in cell_iids)
+
+
+def test_balanced_per_cell_recovery():
+    """Failures under balanced routing route to the victim's owning
+    cell manager: retries re-enter through the cell's engine, nothing
+    is lost, and the parent-facing router sums the counters."""
+    run = _cluster(recovery=True)
+    sched = build_scheduler(
+        RBConfig(charge_compute=False), run.bundle(), run.tiers,
+        HierarchyConfig(n_cells=2, routing="balanced"))
+    reqs = run.requests(160, seed=1)
+    m = run.run_cell(sched, reqs, seed=1)
+    check_terminal_states(reqs)
+    assert m["failed"] == 0
+    assert m["retries"] > 0              # the schedule's kills landed
+    mgrs = [cs.recovery for cs in sched.cell_sims]
+    assert all(mgr is not None for mgr in mgrs)
+    assert sum(mgr.retries for mgr in mgrs) == m["retries"]
+    # a retried request re-entered through an engine bound to its cell
+    for r in reqs:
+        if r.attempt > 0 and r.instance is not None:
+            owner = [any(i.iid == r.instance for i in cell)
+                     for cell in sched.cells]
+            assert sum(owner) == 1
+
+
+# -- the balancer's staleness discipline --------------------------------------
+
+def _fake_digest(bal, ci, t, depth, free, n_alive=4):
+    from repro.distributed.compression import (TelemetryDigest,
+                                               decode_digest,
+                                               encode_digest)
+    d = TelemetryDigest(
+        cell=ci, seq=0, t=t, n_alive=n_alive, n_total=4,
+        tier_occupancy=np.zeros(2, np.float32),
+        tier_depth=np.array([depth, 0], np.float32),
+        tier_free=np.array([free, 0], np.float32))
+    bal.digests[ci] = decode_digest(encode_digest(d))
+
+
+def test_balancer_staleness_and_dark_cells():
+    """pick() prefers the least-loaded fresh cell, routes around a
+    stale (dark) one, and falls back to round-robin only when every
+    digest is past the bound."""
+    bal = GlobalBalancer(HierarchyConfig(
+        n_cells=3, digest_interval_s=0.25, digest_stale_s=1.0))
+    for ci in range(3):
+        bal.membership.register(f"cell{ci}", "cell", now=0.0)
+        bal.assigned_since[ci] = 0
+        bal.assigned_total[ci] = 0
+        bal.membership.heartbeat(f"cell{ci}", 0.0)
+    _fake_digest(bal, 0, t=0.0, depth=50.0, free=2.0)   # busy
+    _fake_digest(bal, 1, t=0.0, depth=1.0, free=8.0)    # idle
+    _fake_digest(bal, 2, t=0.0, depth=0.0, free=8.0, n_alive=0)
+    # cell 1 wins (cell 2's digest says zero alive capacity)
+    assert bal.pick(0.1, [0, 1, 2]) == 1
+    # dead-reckoned placements pile onto cell 1 until it looks as
+    # busy as cell 0 — (depth + assigned + 1)/(free + 1) crosses
+    # cell 0's 51/3 once ~152 placements land on cell 1
+    picks = [bal.pick(0.1, [0, 1]) for _ in range(200)]
+    assert 0 in picks and 1 in picks
+    assert picks[0] == 1                 # idle cell absorbed the front
+    # past the staleness bound cell 1 goes dark: all traffic to cell 0
+    _fake_digest(bal, 0, t=2.0, depth=50.0, free=2.0)
+    bal.membership.heartbeat("cell0", 2.0)
+    bal.assigned_since[0] = 0
+    assert all(bal.pick(2.5, [0, 1]) == 0 for _ in range(5))
+    # every cell dark: blind round-robin still serves
+    picks = {bal.pick(9.0, [0, 1, 2]) for _ in range(6)}
+    assert picks == {0, 1, 2}
+
+
+def test_balanced_mode_rejects_span_config():
+    run = _cluster()
+    with pytest.raises(AssertionError):
+        HierarchicalScheduler(RBConfig(shard_cells=2), run.bundle(),
+                              run.tiers, HierarchyConfig(n_cells=2))

@@ -255,6 +255,74 @@ def test_soak_e2e_trajectory_full(seed):
     assert results["jax"][0] == results["fused"][0]
 
 
+# -- sharded-parity soak (hierarchical scheduling, PR 10) ---------------------
+
+def _hier_fingerprint(reqs):
+    return [(r.rid, r.instance, r.finish_time, r.tokens_out,
+             bool(r.failed), bool(r.shed), r.attempt) for r in reqs]
+
+
+def _cells_trajectory(run, n_cells, reqs_seed, n):
+    """One full run under `n_cells` cells with the cell assignment
+    pinned — span routing shards the scan of ONE logical controller,
+    so placement is independent of the cell count by construction."""
+    reqs = run.requests(n, seed=reqs_seed)
+    rb = RouteBalance(
+        RBConfig(charge_compute=False,
+                 shard_cells=0 if n_cells == 1 else n_cells),
+        run.bundle(), run.tiers)
+    run.run_cell(rb, reqs, seed=0)
+    return _hier_fingerprint(reqs)
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_soak_sharded_parity_small(seed):
+    """Random scenarios under 1/2/4 cells land on identical per-request
+    trajectories when the cell assignment is pinned (span routing: the
+    sharded scan is bitwise the single controller), and the balanced
+    hierarchy — where placement IS the cell count's decision — stays
+    invariant-clean on the same worlds."""
+    from repro.serving.hierarchy import HierarchyConfig, build_scheduler
+    from repro.serving.metrics import check_terminal_states
+    run = _run_for(seed, max_tiers=5, max_instances=20)
+    trajs = {C: _cells_trajectory(run, C, seed + 5, n=40)
+             for C in (1, 2, 4)}
+    assert trajs[1] == trajs[2] == trajs[4]
+    for C in (2, 3):
+        reqs = run.requests(40, seed=seed + 6)
+        sched = build_scheduler(
+            RBConfig(charge_compute=False), run.bundle(), run.tiers,
+            HierarchyConfig(n_cells=C, routing="balanced"))
+        run.run_cell(sched, reqs, seed=0)
+        check_terminal_states(reqs)
+        assert sched.decisions + sched.shed_count == len(reqs)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(6)))
+def test_soak_sharded_parity_full(seed):
+    """Nightly-scale sharded parity: 16-tier x 128-instance random
+    worlds, span trajectories identical across 1/2/4 cells through each
+    scenario's own failure schedule, balanced runs invariant-clean at
+    2/4 cells with every cell taking traffic."""
+    from repro.serving.hierarchy import HierarchyConfig, build_scheduler
+    from repro.serving.metrics import check_terminal_states
+    run = _run_for(seed, max_tiers=16, max_instances=128)
+    trajs = {C: _cells_trajectory(run, C, seed + 20, n=120)
+             for C in (1, 2, 4)}
+    assert trajs[1] == trajs[2] == trajs[4]
+    for C in (2, 4):
+        reqs = run.requests(120, seed=seed + 21)
+        sched = build_scheduler(
+            RBConfig(charge_compute=False), run.bundle(), run.tiers,
+            HierarchyConfig(n_cells=C, routing="balanced"))
+        run.run_cell(sched, reqs, seed=0)
+        check_terminal_states(reqs)
+        assert sched.decisions + sched.shed_count == len(reqs)
+        assert all(sched.balancer.assigned_total[ci] > 0
+                   for ci in range(C))
+
+
 # -- invariant-level ----------------------------------------------------------
 
 def _probe_invariants(sim, log):
